@@ -1,0 +1,38 @@
+"""Fig. 7: communication loads of the master per scheme.
+
+Proportional to the number of computation results the master receives
+per iteration (paper §V-B).  Derived: messages and the reduction factor
+vs Standard GC (the hierarchical pre-aggregation win the paper opens
+with: ~10× for 100 workers / 10 edges).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core.runtime_model import paper_cluster
+from repro.core.schemes import SCHEME_NAMES, make_scheme
+
+
+def main() -> None:
+    params = paper_cluster("mnist")
+    topo = params.topo
+    K = 40
+    t0 = time.perf_counter()
+    loads = {
+        name: make_scheme(name, topo, K, s_e=1, s_w=1,
+                          params=params).master_messages
+        for name in SCHEME_NAMES
+    }
+    us = (time.perf_counter() - t0) * 1e6 / len(loads)
+    std = loads["standard_gc"]
+    for name, msgs in loads.items():
+        row(
+            f"fig7/{name}",
+            us,
+            f"master_msgs={msgs};vs_standard_gc={std / msgs:.1f}x",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Algorithm 2 (JNCSS): optimality vs brute force, runtime scaling to
+1000+ node clusters (the vectorized form), Theorem 3 gap bound.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, row, timeit
+from repro.core import jncss
+from repro.core.runtime_model import ClusterParams, paper_cluster
+from repro.core.topology import Topology
+
+
+def main() -> None:
+    params = paper_cluster("mnist")
+    res = jncss.solve(params, K=40)
+    us = timeit(jncss.solve, params, 40, repeats=5)
+    row(
+        "jncss/paper_cluster",
+        us,
+        f"s_e={res.s_e};s_w={res.s_w};T={res.T_tol:.0f}ms;D={res.D:.0f}",
+    )
+    bound = jncss.theorem3_gap_bound(params, res, n_samples=1000)
+    row("jncss/theorem3_bound", 0.0, f"gap_bound={bound:.0f}ms")
+
+    # scaling: 1000+ node clusters (vectorized Algorithm 2)
+    rng = np.random.default_rng(0)
+    for n, m in ((8, 16), (16, 64), (32, 128)):
+        topo = Topology.uniform(n, m)
+        W = topo.total_workers
+        big = ClusterParams(
+            topo=topo,
+            c=rng.uniform(5, 50, W),
+            gamma=rng.uniform(0.01, 0.1, W),
+            tau_w=rng.uniform(20, 100, W),
+            p_w=rng.uniform(0.05, 0.5, W),
+            tau_e=rng.uniform(50, 500, n),
+            p_e=rng.uniform(0.05, 0.2, n),
+        )
+        t0 = time.perf_counter()
+        r = jncss.solve(big, K=W)
+        us = (time.perf_counter() - t0) * 1e6
+        row(
+            f"jncss/scale_{W}nodes",
+            us,
+            f"s_e={r.s_e};s_w={r.s_w};T={r.T_tol:.0f}ms",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Pallas coded_combine kernel microbenchmark (interpret mode on CPU —
+timings are correctness-path numbers; the derived column also reports
+the arithmetic intensity that drives the TPU roofline placement).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, row, timeit
+from repro.kernels import ref
+from repro.kernels.coded_combine import coded_combine
+
+
+def main() -> None:
+    rng = jax.random.PRNGKey(0)
+    from benchmarks.common import FULL
+    cases = [(8, 40, 1 << 14), (8, 40, 1 << 16)]
+    if FULL:
+        cases.append((16, 200, 1 << 18))
+    for R, K, F in cases:
+        k1, k2 = jax.random.split(rng)
+        coeff = jax.random.normal(k1, (R, K), jnp.float32)
+        grads = jax.random.normal(k2, (K, F), jnp.float32)
+
+        def run_kernel():
+            coded_combine(coeff, grads, interpret=True).block_until_ready()
+
+        def run_ref():
+            ref.coded_combine_ref(coeff, grads).block_until_ready()
+
+        us_k = timeit(run_kernel, repeats=2)
+        us_r = timeit(run_ref, repeats=2)
+        flops = 2 * R * K * F
+        bytes_ = 4 * (R * K + K * F + R * F)
+        row(
+            f"kernel/coded_combine_R{R}_K{K}_F{F}",
+            us_k,
+            f"ref_us={us_r:.0f};intensity={flops / bytes_:.2f}flop/B;"
+            f"tpu_roofline_bound={'memory' if flops / bytes_ < 240 else 'compute'}",
+        )
+
+
+if __name__ == "__main__":
+    main()

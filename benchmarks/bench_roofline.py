@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.  us_per_call reports
+the projected step time = max(term)·1e6.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def main() -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        row("roofline/missing", 0.0,
+            f"no dry-run artifacts under {RESULTS}; run "
+            "`python -m repro.launch.dryrun --all --out results/dryrun`")
+        return
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = "multi" if rec.get("multi_pod") else "single"
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{tag}"
+        if rec["status"] == "skipped":
+            n_skip += 1
+            row(name, 0.0, f"skipped:{rec['reason'][:60]}")
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            row(name, 0.0, f"ERROR:{rec['error'][:80]}")
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / step_s if step_s else 0.0
+        row(
+            name,
+            step_s * 1e6,
+            f"dominant={r['dominant'].replace('_s','')};"
+            f"compute={r['compute_s']:.3f}s;memory={r['memory_s']:.3f}s;"
+            f"collective={r['collective_s']:.3f}s;"
+            f"useful_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_frac={frac:.3f}",
+        )
+    row("roofline/summary", 0.0, f"ok={n_ok};skipped={n_skip};err={n_err}")
+
+
+if __name__ == "__main__":
+    main()

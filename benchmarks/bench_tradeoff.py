@@ -1,0 +1,38 @@
+"""Theorem 1 / Corollary 1: computational-load table (paper §II-B).
+
+Derived column: D_conventional / D_HGC load ratio at equal tolerance —
+the paper's "fewer computational loads at the same straggler tolerance".
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import row
+from repro.core import tradeoff
+from repro.core.topology import Tolerance, Topology
+
+
+def main() -> None:
+    cases = [
+        ("example1_3x3", Topology.uniform(3, 3), Tolerance(1, 1)),
+        ("paper_4x10_s11", Topology.uniform(4, 10), Tolerance(1, 1)),
+        ("paper_4x10_s23", Topology.uniform(4, 10), Tolerance(2, 3)),
+        ("hetero_4-6-8", Topology(m=(4, 6, 8)), Tolerance(1, 2)),
+        ("wide_8x32", Topology.uniform(8, 32), Tolerance(3, 7)),
+        ("pod_2x16", Topology.uniform(2, 16), Tolerance(1, 3)),
+    ]
+    for name, topo, tol in cases:
+        t0 = time.perf_counter()
+        hgc = tradeoff.min_load_fraction(topo, tol)
+        conv = tradeoff.conventional_load_fraction(topo, tol)
+        us = (time.perf_counter() - t0) * 1e6
+        row(
+            f"tradeoff/{name}",
+            us,
+            f"D_ratio={float(conv / hgc):.3f};hgc={float(hgc):.4f};"
+            f"conv={float(conv):.4f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

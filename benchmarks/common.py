@@ -1,0 +1,28 @@
+"""Shared benchmark utilities — timing + CSV row emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows; ``derived``
+carries the benchmark's headline quantity (a speedup, a load, a time).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+# default = budgeted iteration counts (completes in ~10 min on 1 CPU
+# core); BENCH_FULL=1 restores the paper-scale iteration counts and
+# BENCH_FAST=1 further trims for smoke runs.
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+FAST = os.environ.get("BENCH_FAST", "0") == "1" and not FULL
+
+
+def row(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeats * 1e6

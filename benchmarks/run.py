@@ -1,0 +1,44 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV.
+Set BENCH_FAST=1 for the reduced-iteration variant.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_tradeoff",          # Thm 1 / Cor 1 load table
+    "benchmarks.bench_fig7_comm_loads",   # Fig. 7
+    "benchmarks.bench_fig8_iter_time",    # Fig. 8
+    "benchmarks.bench_jncss",             # Alg 2 / Thm 2 / Thm 3
+    "benchmarks.bench_kernels",           # Pallas microbench
+    "benchmarks.bench_roofline",          # dry-run roofline table
+    "benchmarks.bench_extensions",        # Cor. 2 multilayer + partial
+    "benchmarks.bench_table1_time_to_acc",  # Table I
+    "benchmarks.bench_fig56_accuracy",    # Figs. 5 & 6
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"{mod_name}/FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end driver: train a transformer under HGC coded aggregation.
+
+Wraps the production driver (repro.launch.train) — JNCSS planning,
+coded per-example weights, straggler sampling, checkpoints, elastic
+replanning.  The reduced llama3-family config runs a few hundred steps
+on CPU; pass --full on a TPU cluster for the real 8B config.
+
+Run:  PYTHONPATH=src python examples/hierarchical_training.py [--steps N]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_hgc_ckpt")
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", args.arch,
+        "--steps", str(args.steps),
+        "--scheme", "hgc_jncss",
+        "--n-edges", "2", "--n-workers", "4",
+        "--seq-len", "64",
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--checkpoint-every", "50",
+        "--replan-every", "100",
+        "--resume",
+    ]
+    if not args.full:
+        argv.append("--smoke")
+    train_main(argv)

@@ -1,0 +1,41 @@
+"""Reproduce the paper's §V evaluation (reduced): Figs. 5/6-style runs
+of all seven schemes on the paper's heterogeneous 4×10 cluster.
+
+Run:  PYTHONPATH=src python examples/paper_simulation.py [--iters N]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.runtime_model import paper_cluster
+from repro.sim.simulator import simulate_training
+
+SCHEMES = ("uncoded", "greedy", "cgc_w", "cgc_e", "standard_gc",
+           "hgc", "hgc_jncss")
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=150)
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "cifar"])
+    ap.add_argument("--non-iid", type=int, default=1, choices=[1, 2, 3])
+    args = ap.parse_args()
+
+    params = paper_cluster(args.dataset)
+    print(f"{'scheme':12s} {'mean iter':>10s} {'total':>8s} "
+          f"{'final acc':>9s}")
+    results = {}
+    for name in SCHEMES:
+        tr = simulate_training(
+            name, params, dataset=args.dataset,
+            non_iid_level=args.non_iid, iters=args.iters,
+            eval_every=max(args.iters // 10, 1), n_data=4000,
+            batch_per_part=16, seed=3,
+        )
+        results[name] = tr
+        print(f"{name:12s} {np.mean(tr.iter_times_ms):8.0f} ms "
+              f"{tr.total_time_h:7.3f}h {tr.accuracies[-1]:9.3f}")
+    hgc, unc = results["hgc"], results["uncoded"]
+    print(f"\nHGC finishes {unc.total_time_h / hgc.total_time_h:.2f}× "
+          f"faster than Uncoded at matching accuracy "
+          f"(paper: up to {4.78:.2f}× on MNIST time-to-accuracy)")

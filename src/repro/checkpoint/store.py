@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing.
+
+Design for 1000+ nodes (DESIGN.md §5):
+  * atomic: write to ``<dir>/tmp.<step>``, fsync, rename — a crashed
+    save never corrupts the latest checkpoint,
+  * manifest.json tracks steps + config hash; restore validates it,
+  * keep-N garbage collection,
+  * the data-iterator state is part of the checkpoint (exact resume),
+  * pytrees are stored as flat ``.npz`` (one file per save here; on a
+    real cluster each host writes its own param shard — the layout maps
+    1:1 because keys are tree paths).
+
+Elastic restarts: ``elastic.replan`` re-runs JNCSS on the surviving
+topology and re-assigns data parts; model state is topology-independent
+so restore works across cluster sizes.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}#{i}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> PyTree:
+    root: Dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node):
+        if isinstance(node, dict):
+            if node and all(k.startswith("#") for k in node):
+                return [fix(node[f"#{i}"]) for i in range(len(node))]
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+def config_hash(obj: Any) -> str:
+    return hashlib.sha256(
+        json.dumps(repr(obj), sort_keys=True).encode()
+    ).hexdigest()[:16]
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep: int = 3,
+                 cfg_hash: str = ""):
+        self.dir = directory
+        self.keep = keep
+        self.cfg_hash = cfg_hash
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.dir, "manifest.json")
+
+    def manifest(self) -> Dict:
+        if not os.path.exists(self.manifest_path):
+            return {"steps": [], "cfg_hash": self.cfg_hash}
+        with open(self.manifest_path) as f:
+            return json.load(f)
+
+    def _write_manifest(self, man: Dict):
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(man, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.manifest_path)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: PyTree,
+             extra: Optional[Dict] = None) -> str:
+        """Atomic save of a full training state pytree."""
+        state = jax.tree.map(np.asarray, state)
+        flat = _flatten(state)
+        tmp_dir = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
+        os.makedirs(tmp_dir, exist_ok=True)
+        path = os.path.join(tmp_dir, "state.npz")
+        np.savez(path, **flat)
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "cfg_hash": self.cfg_hash,
+            "extra": extra or {},
+            "n_arrays": len(flat),
+            "bytes": int(sum(v.nbytes for v in flat.values())),
+        }
+        with open(os.path.join(tmp_dir, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp_dir, final)
+        man = self.manifest()
+        man["cfg_hash"] = self.cfg_hash
+        man["steps"] = sorted(set(man["steps"] + [step]))
+        self._write_manifest(man)
+        self._gc()
+        return final
+
+    def _gc(self):
+        man = self.manifest()
+        steps = man["steps"]
+        while len(steps) > self.keep:
+            victim = steps.pop(0)
+            d = os.path.join(self.dir, f"step_{victim:010d}")
+            if os.path.exists(d):
+                shutil.rmtree(d)
+        man["steps"] = steps
+        self._write_manifest(man)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = self.manifest()["steps"]
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None
+                ) -> Tuple[int, PyTree, Dict]:
+        """→ (step, state, extra).  Validates the config hash."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        if self.cfg_hash and meta["cfg_hash"] and \
+                meta["cfg_hash"] != self.cfg_hash:
+            raise ValueError(
+                f"checkpoint config hash {meta['cfg_hash']} != "
+                f"current {self.cfg_hash}"
+            )
+        with np.load(os.path.join(d, "state.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        return step, _unflatten(flat), meta.get("extra", {})

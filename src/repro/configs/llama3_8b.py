@@ -1,0 +1,30 @@
+"""llama3-8b [dense]: 32L d=4096 32H (GQA kv=8) ff=14336 V=128256.
+
+GQA + 128k vocab + RoPE θ=500k [arXiv:2407.21783; unverified].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama3-8b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab=256,
+    rope_theta=500_000.0,
+    attn_chunk=32,
+)

@@ -1,0 +1,65 @@
+"""--arch registry: maps architecture ids to (full, smoke) ModelConfigs.
+
+Smoke configs keep the family structure (pattern, MoE, GQA ratios …) at
+toy width/depth so one train/forward step runs on CPU in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = (
+    "llama3-8b",
+    "granite-8b",
+    "starcoder2-3b",
+    "gemma3-27b",
+    "qwen2-vl-2b",
+    "recurrentgemma-2b",
+    "whisper-medium",
+    "mamba2-370m",
+    "granite-moe-3b-a800m",
+    "llama4-maverick-400b-a17b",
+)
+
+_MODULES = {a: a.replace("-", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch in ("paper-mnist-lr", "paper-cifar-cnn"):
+        raise ValueError(
+            f"{arch} is a classic model — use repro.models.classic"
+        )
+    if arch not in _MODULES:
+        raise ValueError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment rules: which (arch × shape) cells run.
+
+    * long_500k only for sub-quadratic archs (DESIGN.md §4),
+    * decode shapes skipped for encoder-only archs (none assigned).
+    """
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "dense-attention arch: 512k decode is out of scope"
+    return True, ""
+
+
+def all_cells():
+    """All (arch, shape) cells with applicability flags."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = shape_applicable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: coded gradient combine  out = C @ G.
+
+C (R, K) is the coding matrix (R worker rows or one decode row), G
+(K, F) the stacked per-part flattened gradients — F is the model size
+(10⁶–10¹¹), K ≤ a few hundred.  This is the encode (eq. 22) / decode
+(eqs. 25/27) hot-spot of the paper.
+
+TPU adaptation (DESIGN.md §3): a GPU implementation would stripe K over
+thread blocks; on TPU we keep the skinny K axis resident in VMEM and
+tile the huge F axis so each grid step is one MXU-shaped (Rb×K)·(K×Fb)
+matmul:
+
+  grid  = (R/Rb, F/Fb)
+  C blk = (Rb, K)     — revisited per F tile (tiny, stays in VMEM)
+  G blk = (K, Fb)     — streamed from HBM
+  out   = (Rb, Fb)
+
+Fb = 512 keeps the working set (K·Fb + Rb·K + Rb·Fb) ≪ 16 MB VMEM for
+K ≤ 2048 and is lane-aligned (128); Rb = 8 matches the f32 sublane.
+The kernel is validated in interpret mode on CPU (tests/test_kernels.py)
+and compiled for TPU via the same pallas_call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+R_BLOCK = 8
+F_BLOCK = 512
+
+
+def _combine_kernel(c_ref, g_ref, o_ref):
+    # c_ref: (Rb, K), g_ref: (K, Fb), o_ref: (Rb, Fb)
+    c = c_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(
+        c, g, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coded_combine(
+    coeff: jnp.ndarray,  # (R, K)
+    grads: jnp.ndarray,  # (K, F)
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """out (R, F) = coeff @ grads, tiled for VMEM.  Pads R and F."""
+    R, K = coeff.shape
+    K2, F = grads.shape
+    assert K == K2, (coeff.shape, grads.shape)
+    Rp = -(-R // R_BLOCK) * R_BLOCK
+    Fp = -(-F // F_BLOCK) * F_BLOCK
+    cp = jnp.pad(coeff, ((0, Rp - R), (0, 0)))
+    gp = jnp.pad(grads, ((0, 0), (0, Fp - F)))
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(Rp // R_BLOCK, Fp // F_BLOCK),
+        in_specs=[
+            pl.BlockSpec((R_BLOCK, K), lambda r, f: (r, 0)),
+            pl.BlockSpec((K, F_BLOCK), lambda r, f: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((R_BLOCK, F_BLOCK), lambda r, f: (r, f)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Fp), grads.dtype),
+        interpret=interpret,
+    )(cp, gp)
+    return out[:R, :F]
+
+
+def _combine_q_kernel(c_ref, g_ref, s_ref, o_ref, *, block: int):
+    # c: (Rb, K), g: (K, Fb) int8, s: (K, Fb/block), o: (Rb, Fb)
+    c = c_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    s = s_ref[...]  # (K, nb)
+    K, Fb = g.shape
+    nb = Fb // block
+    g = (g.reshape(K, nb, block) * s[:, :, None]).reshape(K, Fb)
+    o_ref[...] = jnp.dot(
+        c, g, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret")
+)
+def coded_combine_q(
+    coeff: jnp.ndarray,  # (R, K) f32
+    grads_q: jnp.ndarray,  # (K, F) int8
+    scales: jnp.ndarray,  # (K, F // block) f32
+    block: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused int8-dequant coded combine (compression path).
+
+    The de-quantization happens in VMEM right before the MXU matmul —
+    HBM only ever sees int8 gradients (4× traffic cut vs f32).
+    F must be a multiple of ``block``; F_BLOCK must too (128 | 512 ✓).
+    """
+    R, K = coeff.shape
+    K2, F = grads_q.shape
+    assert K == K2 and F % block == 0
+    Rp = -(-R // R_BLOCK) * R_BLOCK
+    Fp = -(-F // F_BLOCK) * F_BLOCK
+    nb_blk = F_BLOCK // block
+    cp = jnp.pad(coeff, ((0, Rp - R), (0, 0)))
+    gp = jnp.pad(grads_q, ((0, 0), (0, Fp - F)))
+    sp = jnp.pad(scales, ((0, 0), (0, (Fp - F) // block)))
+    out = pl.pallas_call(
+        functools.partial(_combine_q_kernel, block=block),
+        grid=(Rp // R_BLOCK, Fp // F_BLOCK),
+        in_specs=[
+            pl.BlockSpec((R_BLOCK, K), lambda r, f: (r, 0)),
+            pl.BlockSpec((K, F_BLOCK), lambda r, f: (0, f)),
+            pl.BlockSpec((K, nb_blk), lambda r, f: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((R_BLOCK, F_BLOCK), lambda r, f: (r, f)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Fp), jnp.float32),
+        interpret=interpret,
+    )(cp, gp, sp)
+    return out[:R, :F]

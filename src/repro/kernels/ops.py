@@ -1,0 +1,73 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU
+the same pallas_call compiles to Mosaic.  ``encode_tree`` /
+``decode_tree`` wire the kernel into the HGC pytree world.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.coded_combine import coded_combine, coded_combine_q
+
+PyTree = Any
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def combine(coeff, grads, use_pallas: bool = True):
+    """out = coeff @ grads with the kernel (interpret on CPU)."""
+    if not use_pallas:
+        return ref.coded_combine_ref(coeff, grads)
+    return coded_combine(coeff, grads, interpret=not _on_tpu())
+
+
+def combine_q(coeff, grads_q, scales, block: int = 128,
+              use_pallas: bool = True):
+    if not use_pallas:
+        return ref.coded_combine_q_ref(coeff, grads_q, scales, block)
+    return coded_combine_q(
+        coeff, grads_q, scales, block=block, interpret=not _on_tpu()
+    )
+
+
+def flatten_tree(tree: PyTree) -> jnp.ndarray:
+    return jnp.concatenate([jnp.ravel(x) for x in jax.tree.leaves(tree)])
+
+
+def unflatten_like(vec: jnp.ndarray, tree: PyTree) -> PyTree:
+    leaves = jax.tree.leaves(tree)
+    treedef = jax.tree.structure(tree)
+    out = []
+    off = 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def encode_messages(code, g_parts: jnp.ndarray) -> jnp.ndarray:
+    """All workers' messages G_ij at once: (Σm_i, F) = E @ g_parts.
+
+    ``E`` is the collapsed encoding matrix (worker coeffs ⊙ layer-1
+    rows) — one kernel launch instead of Σm_i separate combines.
+    """
+    E = jnp.asarray(code.encoding_matrix_flat(), jnp.float32)
+    return combine(E, g_parts)
+
+
+def decode_gradient(code, messages: jnp.ndarray, fast_edges,
+                    fast_workers) -> jnp.ndarray:
+    """Decoded full gradient from worker messages via λ weights."""
+    lam = jnp.asarray(
+        code.collapsed_weights(fast_edges, fast_workers), jnp.float32
+    )
+    return combine(lam[None, :], messages)[0]

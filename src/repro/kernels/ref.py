@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coded_combine_ref(coeff: jnp.ndarray, grads: jnp.ndarray) -> jnp.ndarray:
+    """out[r, f] = Σ_k coeff[r, k] · grads[k, f].
+
+    The HGC hot-spot: encoding (worker messages from part-gradients,
+    eq. 22) and decoding (weighted recombination, eqs. 25/27) are both
+    this skinny matmul over a huge flattened-gradient F axis.
+    """
+    return jnp.einsum(
+        "rk,kf->rf", coeff.astype(jnp.float32), grads.astype(jnp.float32)
+    ).astype(grads.dtype)
+
+
+def coded_combine_q_ref(
+    coeff: jnp.ndarray,  # (R, K) f32
+    grads_q: jnp.ndarray,  # (K, F) int8
+    scales: jnp.ndarray,  # (K, F // block) f32 per-block scales
+    block: int,
+) -> jnp.ndarray:
+    """Fused int8-dequant coded combine (gradient-compression path)."""
+    K, F = grads_q.shape
+    nb = F // block
+    g = grads_q.reshape(K, nb, block).astype(jnp.float32)
+    g = g * scales[:, :, None]
+    out = jnp.einsum("rk,knb->rnb", coeff.astype(jnp.float32), g)
+    return out.reshape(coeff.shape[0], F)

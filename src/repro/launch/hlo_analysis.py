@@ -1,0 +1,448 @@
+"""HLO roofline analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — a
+``lax.scan`` body (layer stack, microbatch accumulation, KV-chunk scan)
+is under-counted by its trip count, which under-reports FLOPs by ~100×
+on our scanned models.  This module parses post-optimization HLO text,
+walks the call graph, and multiplies loop bodies by their
+``backend_config known_trip_count`` — yielding faithful per-device:
+
+  * FLOPs           (dot: 2·|out|·contracted, conv approx, elementwise),
+  * bytes accessed  (boundary reads+writes; fusion bodies are free),
+  * collective operand/link bytes per class, split ICI vs cross-pod.
+
+This is the profiler of the dry-run (no real TPU): §Roofline terms and
+the §Perf iteration loop read from here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|"
+    r"pred|c64|c128)\[([0-9,]*)\]"
+)
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops that are pure views / metadata — no data movement
+_NOCOST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "domain",
+    "opt-barrier",
+}
+# attention-einsum signatures in op_name metadata (fwd + bwd forms)
+_ATTN_SIG = ("bskgd,btkd", "bkgst,btkd", "bkgsd,btkd", "bkgst,bskgd",
+             "bkgst,bkgsd")
+
+def _is_attn(line: str) -> bool:
+    return any(sig in line for sig in _ATTN_SIG)
+
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "power", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "logistic", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign",
+    "cosine", "sine", "floor", "ceil", "round-nearest-afz", "clamp",
+    "select", "compare", "and", "or", "xor", "not", "atan2", "remainder",
+    "erf",
+}
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _shapes_in(text: str) -> List[Tuple[str, int, int, int]]:
+    """All (dtype, nelems, bytes, bf16eq_bytes) shape tokens."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = _nelems(dims)
+        b = n * _DTYPE_BYTES[dt]
+        beq = n * min(_DTYPE_BYTES[dt], 2) if dt in ("f32", "f64") else b
+        out.append((dt, n, b, beq))
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_bytes: int
+    out_elems: int
+    operands: List[str]
+    line: str
+    root: bool = False
+    out_bytes_eq: int = 0  # f32 counted at 2 B (bf16-equivalent)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    # bf16-equivalent bytes: XLA:CPU float-normalization upcasts every
+    # bf16 tensor to f32, inflating byte counts ~2× vs a TPU deployment
+    # whose policy is bf16 activations/collectives.  These fields count
+    # f32 elements at 2 bytes — the "intended dtype" lower estimate.
+    bytes_bf16eq: float = 0.0
+    # bf16eq bytes attributable to attention-score einsums — traffic a
+    # fused Pallas flash kernel (kernels/flash_attention.py) retires in
+    # VMEM on a real TPU.  memory_s_pallas = (bytes − attn)/HBM_BW.
+    attn_bytes_bf16eq: float = 0.0
+    coll: Optional[Dict] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {
+                c: {"count": 0.0, "operand_bytes": 0.0, "output_bytes": 0.0,
+                    "link_bytes": 0.0, "cross_pod_link_bytes": 0.0,
+                    "link_bytes_bf16eq": 0.0}
+                for c in COLLECTIVES
+            }
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_bf16eq += other.bytes_bf16eq * mult
+        self.attn_bytes_bf16eq += other.attn_bytes_bf16eq * mult
+        for c in COLLECTIVES:
+            for k in self.coll[c]:
+                self.coll[c][k] += other.coll[c][k] * mult
+
+
+def _parse_op_line(s: str):
+    """'%name = <type> kind(operands), attrs' → (name, out_part, kind,
+    args_str) or None.  Tuple types may contain /*index=N*/ comments, so
+    the type is extracted with balanced-paren scanning, not a regex."""
+    if " = " not in s:
+        return None
+    lhs, rhs = s.split(" = ", 1)
+    name = lhs.strip()
+    if name.startswith("ROOT "):
+        name = name[5:]
+    name = name.lstrip("%")
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        out_part, rest = rhs[: end + 1], rhs[end + 1 :].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        out_part, rest = rhs[:sp], rhs[sp + 1 :].strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    kind = m.group(1)
+    start = len(kind) + 1
+    depth, i = 1, start
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    return name, out_part, kind, rest[start : i - 1]
+
+
+def parse_module(text: str):
+    """→ (computations: name → [Op], entry_name, fusion_comp_names)."""
+    comps: Dict[str, List[Op]] = {}
+    entry = None
+    cur: Optional[str] = None
+    fusion_comps = set()
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            # computation header: "%name (params…) -> result {"
+            # (params may nest parens — match on the line's first token)
+            if s.endswith("{") and "->" in s and " = " not in s:
+                toks = s.split()
+                i = 1 if toks[0] == "ENTRY" else 0
+                if i < len(toks):
+                    cur = toks[i].lstrip("%").split("(")[0]
+                    comps[cur] = []
+                    if toks[0] == "ENTRY":
+                        entry = cur
+                continue
+        else:
+            if s == "}":
+                cur = None
+                continue
+            parsed = _parse_op_line(s)
+            if parsed is None:
+                continue
+            name, out_part, kind, args = parsed
+            shp = _shapes_in(out_part)
+            out_b = sum(t[2] for t in shp)
+            out_n = sum(t[1] for t in shp)
+            out_beq = sum(t[3] for t in shp)
+            operands = re.findall(r"%([\w.\-]+)", args)
+            comps[cur].append(
+                Op(name, kind, out_b, out_n, operands, s,
+                   root=s.startswith("ROOT "), out_bytes_eq=out_beq)
+            )
+            if kind == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", s)
+                if fm:
+                    fusion_comps.add(fm.group(1))
+    return comps, entry, fusion_comps
+
+
+def _dot_flops(op: Op, sym: Dict[str, Op]) -> float:
+    out_n = op.out_elems
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    lhs = sym.get(op.operands[0]) if op.operands else None
+    contracted = 1
+    if m and lhs is not None:
+        lhs_shp = _SHAPE_RE.search(lhs.line.split(" = ", 1)[1])
+        if lhs_shp:
+            dims = [int(d) for d in lhs_shp.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contracted *= dims[int(ci)]
+    return 2.0 * out_n * contracted
+
+
+def _conv_flops(op: Op, sym: Dict[str, Op]) -> float:
+    # approx: 2 · |out| · (kernel elems / out_features)
+    if len(op.operands) < 2:
+        return 2.0 * op.out_elems
+    ker = sym.get(op.operands[1])
+    if ker is None:
+        return 2.0 * op.out_elems
+    ksh = _SHAPE_RE.search(ker.line.split(" = ", 1)[1])
+    if not ksh:
+        return 2.0 * op.out_elems
+    kd = [int(d) for d in ksh.group(2).split(",") if d]
+    kelems = 1
+    for d in kd:
+        kelems *= d
+    out_feat = max(kd[-1], 1)
+    return 2.0 * op.out_elems * (kelems / out_feat)
+
+
+def _classify_groups(line: str, pod_stride: int) -> bool:
+    """True iff the collective spans devices ≥ pod_stride apart (DCN)."""
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        if ids and max(ids) - min(ids) >= pod_stride:
+            return True
+        return False
+    # iota format: replica_groups=[8,64]<=[512] (reshape/transpose form)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[(\d+)\]"
+                  r"(?:T\(([\d,]+)\))?", line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        # contiguous groups of size gs: span = gs − 1 unless transposed
+        if m.group(4):  # transposed iota — conservative: assume strided
+            return gs * ng >= pod_stride * 2 or True if gs > 1 else False
+        return gs - 1 >= pod_stride
+    return False
+
+
+def _fusion_traffic(fops: List[Op], attr: str = "out_bytes") -> float:
+    """Approximate HBM traffic of one fusion execution.
+
+    Reads: per inner parameter — if ALL its users slice it
+    (slice/dynamic-slice/gather), only the slices move; else the full
+    parameter moves.  Writes: the root's bytes, except a
+    dynamic-update-slice root writes only the inserted update.
+    """
+    users: Dict[str, List[Op]] = {}
+    for o in fops:
+        for ref in o.operands:
+            users.setdefault(ref, []).append(o)
+    traffic = 0.0
+    root_out = 0.0
+    gb = lambda o: getattr(o, attr)
+    for o in fops:
+        if o.kind == "parameter":
+            us = users.get(o.name, [])
+            if us and all(
+                u.kind in ("slice", "dynamic-slice", "gather")
+                and u.operands and u.operands[0] == o.name
+                for u in us
+            ):
+                traffic += sum(gb(u) for u in us)
+            else:
+                traffic += gb(o)
+        if o.root:
+            if o.kind == "dynamic-update-slice" and len(o.operands) > 1:
+                sym = {x.name: x for x in fops}
+                upd = sym.get(o.operands[1])
+                root_out = gb(upd) if upd else gb(o)
+            else:
+                root_out = gb(o)
+    return traffic + root_out
+
+
+def analyze(text: str, pod_stride: int = 256) -> Costs:
+    comps, entry, fusion_comps = parse_module(text)
+    memo: Dict[str, Costs] = {}
+
+    def comp_cost(cname: str, in_fusion: bool) -> Costs:
+        key = cname + ("#f" if in_fusion else "")
+        if key in memo:
+            return memo[key]
+        total = Costs()
+        ops = comps.get(cname, [])
+        sym = {o.name: o for o in ops}
+        for op in ops:
+            k = op.kind
+            if k in _NOCOST:
+                continue
+            # ---- FLOPs ----
+            if k == "dot":
+                total.flops += _dot_flops(op, sym)
+            elif k == "convolution":
+                total.flops += _conv_flops(op, sym)
+            elif k in _ELEMENTWISE:
+                total.flops += op.out_elems
+            elif k in ("reduce", "reduce-window"):
+                in_n = sum(
+                    sym[o].out_elems for o in op.operands if o in sym
+                ) or op.out_elems
+                total.flops += in_n
+            # ---- bytes (boundary ops only; fusion bodies are fused) ----
+            if not in_fusion:
+                if k in ("dynamic-slice", "slice", "gather"):
+                    # traffic = the slice moved, not the sliced-from buffer
+                    total.bytes += 2 * op.out_bytes
+                    total.bytes_bf16eq += 2 * op.out_bytes_eq
+                    if _is_attn(op.line):
+                        total.attn_bytes_bf16eq += 2 * op.out_bytes_eq
+                elif k in ("dynamic-update-slice", "scatter"):
+                    big = (sym[op.operands[1]]
+                           if len(op.operands) > 1
+                           and op.operands[1] in sym else op)
+                    total.bytes += 2 * big.out_bytes
+                    total.bytes_bf16eq += 2 * big.out_bytes_eq
+                elif k not in ("while", "conditional", "call", "fusion"):
+                    opnds = [sym[o] for o in op.operands if o in sym]
+                    total.bytes += op.out_bytes + sum(
+                        o.out_bytes for o in opnds)
+                    beq = op.out_bytes_eq + sum(
+                        o.out_bytes_eq for o in opnds)
+                    total.bytes_bf16eq += beq
+                    if _is_attn(op.line):
+                        total.attn_bytes_bf16eq += beq
+            # ---- collectives ----
+            base = None
+            for c in COLLECTIVES:
+                if k == c or k.startswith(c + "-start"):
+                    base = c
+                    break
+            if base is not None:
+                in_b = sum(
+                    sym[o].out_bytes for o in op.operands if o in sym
+                )
+                in_beq = sum(
+                    sym[o].out_bytes_eq for o in op.operands if o in sym
+                )
+                cross = _classify_groups(op.line, pod_stride)
+                st = total.coll[base]
+                st["count"] += 1
+                st["operand_bytes"] += in_b
+                st["output_bytes"] += op.out_bytes
+                link = 2 * in_b if base == "all-reduce" else (
+                    op.out_bytes if base == "all-gather" else in_b
+                )
+                link_eq = 2 * in_beq if base == "all-reduce" else (
+                    op.out_bytes_eq if base == "all-gather" else in_beq
+                )
+                st["link_bytes"] += link
+                st["link_bytes_bf16eq"] += link_eq
+                if cross:
+                    st["cross_pod_link_bytes"] += link
+            # ---- control flow / calls ----
+            if k == "while":
+                m = re.search(r"body=%?([\w.\-]+)", op.line)
+                c = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.line)
+                trip = float(c.group(1)) if c else 1.0
+                if m:
+                    total.add(comp_cost(m.group(1), in_fusion), trip)
+            elif k == "conditional":
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"true_computation=%?([\w.\-]+)|"
+                    r"false_computation=%?([\w.\-]+))", op.line)
+                names: List[str] = []
+                for b in branches:
+                    for part in b:
+                        if part:
+                            names.extend(
+                                re.findall(r"%?([\w.\-]+)", part))
+                if names:
+                    worst = None
+                    for nm in names:
+                        cc = comp_cost(nm, in_fusion)
+                        if worst is None or cc.flops > worst.flops:
+                            worst = cc
+                    if worst:
+                        total.add(worst)
+            elif k == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if m:
+                    total.add(comp_cost(m.group(1), in_fusion))
+            elif k == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if m:
+                    # FLOPs inside count; bytes: slice-aware boundary model
+                    total.add(comp_cost(m.group(1), True))
+                    if not in_fusion:
+                        fops = comps.get(m.group(1), [])
+                        total.bytes += _fusion_traffic(fops)
+                        feq = _fusion_traffic(fops, "out_bytes_eq")
+                        total.bytes_bf16eq += feq
+                        if _is_attn(op.line) or any(
+                                _is_attn(fo.line) for fo in fops[:40]):
+                            total.attn_bytes_bf16eq += feq
+        memo[key] = total
+        return total
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comp_cost(entry, False)
+
+
+def analysis_record(text: str, pod_stride: int = 256) -> Dict:
+    c = analyze(text, pod_stride)
+    return {
+        "flops": c.flops,
+        "bytes_accessed": c.bytes,
+        "bytes_accessed_bf16eq": c.bytes_bf16eq,
+        "attn_bytes_bf16eq": c.attn_bytes_bf16eq,
+        "collectives": c.coll,
+        "collective_operand_bytes": sum(
+            v["operand_bytes"] for v in c.coll.values()),
+        "collective_link_bytes": sum(
+            v["link_bytes"] for v in c.coll.values()),
+        "collective_link_bytes_bf16eq": sum(
+            v["link_bytes_bf16eq"] for v in c.coll.values()),
+        "cross_pod_link_bytes": sum(
+            v["cross_pod_link_bytes"] for v in c.coll.values()),
+    }

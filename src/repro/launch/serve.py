@@ -1,0 +1,94 @@
+"""Batched serving driver: prefill + decode with KV caches.
+
+Single-host reference of the serving path that decode_32k/long_500k
+dry-run at scale.  Demonstrates prefill→decode handoff (including the
+local-attention ring-buffer trim) and batched token generation.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models import transformer as tf
+
+
+def prefill_into_cache(params, cfg, tokens, max_len, enc_frames=None):
+    """Run prefill and materialize a decode cache of size max_len."""
+    B, S = tokens.shape
+    cache = tf.init_cache(cfg, B, max_len, dtype="float32")
+    if cfg.is_encdec:
+        cache = tf.fill_cross_cache(params, cfg, enc_frames, cache)
+    # feed tokens through decode_step (simplest exact handoff — the
+    # dryrun prefill path instead lowers tf.prefill for the bulk form)
+    step = jax.jit(lambda p, t, c: tf.decode_step(p, cfg, t, c))
+    logits = None
+    for t in range(S):
+        logits, cache = step(params, tokens[:, t : t + 1], cache)
+    return logits, cache
+
+
+def generate(params, cfg, prompt, gen_len, max_len, enc_frames=None,
+             greedy=True, seed=0):
+    logits, cache = prefill_into_cache(
+        params, cfg, prompt, max_len, enc_frames
+    )
+    step = jax.jit(lambda p, t, c: tf.decode_step(p, cfg, t, c))
+    rng = jax.random.PRNGKey(seed)
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for t in range(gen_len):
+        out.append(np.asarray(tok))
+        logits, cache = step(params, tok, cache)
+        if greedy:
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits)[:, None].astype(
+                jnp.int32)
+    return np.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    rng = jax.random.PRNGKey(args.seed)
+    params = tf.init_params(rng, cfg)
+    prompt = jax.random.randint(
+        rng, (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    enc = None
+    if cfg.is_encdec:
+        enc = jax.random.normal(
+            rng, (args.batch, cfg.enc_len, cfg.d_model)
+        )
+    t0 = time.time()
+    toks = generate(
+        params, cfg, prompt, args.gen,
+        max_len=args.prompt_len + args.gen + 1, enc_frames=enc,
+    )
+    dt = time.time() - t0
+    print(f"[serve] {args.arch}: generated {toks.shape} tokens in "
+          f"{dt:.1f}s ({args.batch*args.gen/dt:.1f} tok/s)")
+    print("[serve] sample:", toks[0][:16].tolist())
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""train_step / serve_step builders shared by dryrun.py, train.py, serve.py.
+
+The train step includes: microbatched gradient accumulation (lax.scan),
+global-norm clipping, cosine LR schedule, the optimizer update, and the
+HGC hook — per-example coded weights arrive in ``batch["weights"]`` and
+a per-shard-group decode weight ``batch["lam"]`` scales the loss, so the
+pjit gradient all-reduce computes the *decoded* coded aggregate
+(DESIGN.md §3, integration point 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import transformer as tf
+from repro.optim import clip_by_global_norm, cosine_schedule, make_optimizer
+
+PyTree = Any
+
+# per-arch optimizer defaults for the production configs: adafactor where
+# Adam moments would not fit 16 GB/chip HBM (the 400B MoE).
+ARCH_OPTIMIZER = {
+    "llama4-maverick-400b-a17b": "adafactor",
+    "gemma3-27b": "adafactor",
+}
+
+
+def default_optimizer_name(cfg: ModelConfig, tcfg: TrainConfig) -> str:
+    return ARCH_OPTIMIZER.get(cfg.name, tcfg.optimizer)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    optimizer=None,
+    accum_shardings=None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) →
+    (params, opt_state, metrics).
+
+    ``accum_shardings``: optional params-shaped NamedSharding tree —
+    pins the f32 gradient accumulator to the FSDP param shards so each
+    microbatch's gradient reduction lowers as a reduce-scatter instead
+    of a full all-reduce (§Perf hillclimb knob).
+    """
+    if optimizer is None:
+        optimizer = make_optimizer(default_optimizer_name(cfg, tcfg))
+    lr_at = cosine_schedule(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+
+    def loss_fn(params, batch):
+        # HGC hook: batch["weights"] carries coding coefficient × λ_ij
+        # per example; the pjit gradient reduction then yields the
+        # decoded coded aggregate Σ λ_ij G_ij = g exactly.
+        return tf.loss_and_metrics(params, cfg, batch)
+
+    def grads_of(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 0:
+            B = batch["tokens"].shape[0]
+            mb = min(tcfg.microbatch, B)
+            n_micro = max(B // mb, 1)
+
+            # reshape (B, …) → (n_micro, mb, …) and scan over the leading
+            # axis: scan's xs slicing keeps the batch-dim sharding intact
+            # (a dynamic_slice over a sharded batch dim would force XLA
+            # to gather across shards).
+            def split(k, x):
+                if k == "positions" and x.ndim == 3 and x.shape[1] == B:
+                    # M-RoPE positions: (3, B, S) — batch is axis 1
+                    r = x.reshape(3, n_micro, mb, x.shape[2])
+                    return jnp.moveaxis(r, 1, 0)  # (n_micro, 3, mb, S)
+                if x.ndim == 0 or x.shape[0] != B:
+                    return None
+                return x.reshape(n_micro, mb, *x.shape[1:])
+
+            xs = {k: split(k, v) for k, v in batch.items()}
+            consts = {k: v for k, v in batch.items() if xs.get(k) is None}
+            xs = {k: v for k, v in xs.items() if v is not None}
+
+            def body(carry, micro_xs):
+                acc, msum = carry
+                micro = dict(consts)
+                micro.update(micro_xs)
+                (_, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, micro)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g
+                )
+                return (acc, msum + metrics["loss"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            if accum_shardings is not None:
+                zeros = jax.tree.map(
+                    lambda z, s: jax.lax.with_sharding_constraint(z, s),
+                    zeros, accum_shardings,
+                )
+            (gsum, lsum), _ = lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), xs
+            )
+            if "denom" in batch:
+                # fixed-denominator (linear/coded) loss: microbatch
+                # losses SUM to the full-batch loss — no /n_micro
+                grads, metrics = gsum, {"loss": lsum}
+            else:
+                grads = jax.tree.map(lambda g: g / n_micro, gsum)
+                metrics = {"loss": lsum / n_micro}
+            return grads, metrics
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return grads, {"loss": metrics["loss"]}
+
+    def train_step(params, opt_state, batch, step):
+        grads, metrics = grads_of(params, batch)
+        if tcfg.grad_clip > 0:
+            grads = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_at(step)
+        updates, new_state = optimizer.update(
+            grads, opt_state, params, lr, tcfg.weight_decay
+        )
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = dict(metrics)
+        metrics["lr"] = lr
+        metrics["grad_norm"] = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        return new_params, new_state, metrics
+
+    train_step.optimizer = optimizer
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, cache, token) → (logits, new_cache)."""
+
+    def serve_step(params, cache, token):
+        return tf.decode_step(params, cfg, token, cache)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """prefill_step(params, batch) → (last logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache, _ = tf.forward(
+            params, cfg, batch["tokens"],
+            positions=batch.get("positions"),
+            enc_frames=batch.get("enc_frames"),
+            return_cache=True,
+            last_only=True,
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+# ----------------------------------------------------------------------
+# abstract inputs — the assignment's input_specs()
+# ----------------------------------------------------------------------
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Weak-type-correct, shardable, no device allocation.  Frontend stubs
+    (whisper frames / VLM patch embeds, per the assignment) appear as
+    precomputed embedding tensors.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if shape.kind == "train":
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["weights"] = jax.ShapeDtypeStruct((B, S), f32)
+        if cfg.mrope_sections:
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        if cfg.is_encdec:
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_len, cfg.d_model), f32
+            )
+        return specs
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def abstract_state(cfg: ModelConfig, tcfg: TrainConfig, optimizer=None):
+    """Abstract (params, opt_state) without allocation."""
+    if optimizer is None:
+        optimizer = make_optimizer(default_optimizer_name(cfg, tcfg))
+    params = jax.eval_shape(
+        lambda: tf.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    opt_state = jax.eval_shape(optimizer.init, params)
+    return params, opt_state
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

@@ -1,0 +1,481 @@
+"""Attention machinery: GQA, RoPE/M-RoPE, dense & chunked (online-softmax)
+variants, sliding windows, ring-buffer decode caches.
+
+Layout conventions:
+  q:      (B, S, H,  Dh)
+  k, v:   (B, T, Kv, Dh)      H = G · Kv (grouped-query attention)
+
+All softmax math runs in float32 regardless of input dtype.
+
+The chunked path is a pure-JAX online-softmax (flash-style) attention:
+``lax.scan`` over KV chunks carrying (max, denom, acc).  For very long
+sequences the query axis is additionally chunked with ``lax.map`` so the
+largest live score block is (B, Cq, H, Ck) — this is what makes 32k
+prefill fit per-chip HBM in the dry-run without a Pallas dependency on
+the CPU backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim/2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float = 10_000.0,
+    sections: Tuple[int, ...] = (),
+) -> jnp.ndarray:
+    """Rotary embedding.  ``positions``: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into
+    ``sections`` (e.g. (16, 24, 24) for Dh=128) driven by the temporal /
+    height / width position streams respectively.
+    """
+    B, S, H, Dh = x.shape
+    inv = rope_freqs(Dh, theta)  # (Dh/2,)
+    if positions.ndim == 3:  # M-RoPE
+        if not sections:
+            raise ValueError("M-RoPE positions need mrope sections")
+        assert sum(sections) == Dh // 2, (sections, Dh)
+        import numpy as np
+
+        sec_id = np.repeat(
+            np.arange(len(sections)), np.array(sections)
+        )  # (Dh/2,) static map: which stream drives each freq slot
+        # angles: (B, S, Dh/2) selecting the right position stream
+        pos = positions.astype(jnp.float32)  # (3, B, S)
+        pos_per_slot = pos[sec_id]  # (Dh/2, B, S)
+        ang = jnp.einsum("dbs,d->bsd", pos_per_slot, inv)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, Dh/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# masks
+# ----------------------------------------------------------------------
+def _allowed(
+    q_pos: jnp.ndarray,  # (..., S)
+    k_pos: jnp.ndarray,  # (..., T)
+    causal: bool,
+    window: int,
+) -> jnp.ndarray:
+    """(..., S, T) boolean mask of allowed attention edges."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = k >= 0
+    if causal:
+        ok &= k <= q
+    if window > 0:
+        ok &= q - k < window
+    return ok
+
+
+def _softcap(scores: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+# ----------------------------------------------------------------------
+# dense attention
+# ----------------------------------------------------------------------
+def dense_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Reference/materializing attention; fine for short sequences."""
+    B, S, H, Dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qf = q.astype(jnp.float32).reshape(B, S, Kv, G, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf * scale, kf)
+    scores = _softcap(scores, softcap)
+    mask = _allowed(q_pos, k_pos, causal, window)  # (B?, S, T)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# chunked (online softmax) attention
+# ----------------------------------------------------------------------
+def _kv_chunk_scan(
+    q: jnp.ndarray,  # (B, S, Kv, G, Dh) f32, pre-scaled
+    k: jnp.ndarray,  # (B, T, Kv, Dh)
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # (S,)
+    k_pos: jnp.ndarray,  # (T,)
+    chunk: int,
+    causal: bool,
+    window: int,
+    softcap: float,
+) -> jnp.ndarray:
+    B, S, Kv, G, Dh = q.shape
+    T = k.shape[1]
+    n_chunks = T // chunk
+
+    def body(carry, ic):
+        m, l, acc = carry
+        start = ic * chunk
+        kc = lax.dynamic_slice_in_dim(k, start, chunk, 1).astype(jnp.float32)
+        vc = lax.dynamic_slice_in_dim(v, start, chunk, 1).astype(jnp.float32)
+        kp = lax.dynamic_slice_in_dim(k_pos, start, chunk, 0)
+        s = jnp.einsum("bskgd,btkd->bkgst", q, kc)
+        s = _softcap(s, softcap)
+        mask = _allowed(q_pos, kp, causal, window)  # (S, chunk)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vc
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Kv, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Kv, G, S, Dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 3, 1)  # (B, S, Kv, G, Dh)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # (S,) shared positions (no batch offsets)
+    k_pos: jnp.ndarray,  # (T,)
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    kv_chunk: int = 1024,
+    q_chunk: int = 0,
+) -> jnp.ndarray:
+    """Memory-bounded attention: scan over KV chunks, optional q-chunking."""
+    B, S, H, Dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    T = k.shape[1]
+    kv_chunk = min(kv_chunk, T)
+    if T % kv_chunk:
+        raise ValueError(f"T={T} not divisible by kv_chunk={kv_chunk}")
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, Kv, G, Dh)
+
+    if q_chunk and S > q_chunk:
+        if S % q_chunk:
+            raise ValueError(f"S={S} not divisible by q_chunk={q_chunk}")
+        nq = S // q_chunk
+        qb = qf.reshape(B, nq, q_chunk, Kv, G, Dh)
+        qpb = q_pos.reshape(nq, q_chunk)
+
+        def one(args):
+            qi, qpi = args  # qi: (B, Cq, Kv, G, Dh)
+            return _kv_chunk_scan(
+                qi, k, v, qpi, k_pos, kv_chunk, causal, window, softcap,
+            )
+
+        outs = lax.map(one, (jnp.moveaxis(qb, 1, 0), qpb))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Kv, G, Dh)
+    else:
+        out = _kv_chunk_scan(
+            qf, k, v, q_pos, k_pos, kv_chunk, causal, window, softcap
+        )
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def attention(
+    q, k, v, q_pos, k_pos, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    kv_chunk: int = 1024,
+    q_chunk_threshold: int = 8192,
+    q_chunk: int = 2048,
+):
+    """Size-dispatching attention used by the transformer blocks."""
+    S, T = q.shape[1], k.shape[1]
+    if T <= kv_chunk * 2:
+        qp = q_pos if q_pos.ndim > 1 else q_pos[None]
+        kp = k_pos if k_pos.ndim > 1 else k_pos[None]
+        return dense_attention(
+            q, k, v, qp, kp, causal=causal, window=window, softcap=softcap
+        )
+    return chunked_attention(
+        q, k, v, q_pos, k_pos,
+        causal=causal, window=window, softcap=softcap, kv_chunk=kv_chunk,
+        q_chunk=q_chunk if S >= q_chunk_threshold else 0,
+    )
+
+
+# ----------------------------------------------------------------------
+# flash attention with custom VJP (beyond-paper perf: EXPERIMENTS.md §Perf)
+#
+# The autodiff of the kv-chunked scan materializes per-chunk f32 score
+# residuals — (B, H, S, T) worth of HBM traffic and temp memory, the
+# dominant memory-roofline term of every train cell.  This custom VJP
+# saves only (out, logsumexp) and RECOMPUTES scores chunk-by-chunk in
+# the backward pass (the standard flash-attention backward, here in
+# pure JAX so XLA:TPU fuses it; a Pallas variant would go further).
+# ----------------------------------------------------------------------
+def _flash_fwd_scan(qf, k, v, q_start, chunk, causal, window, softcap):
+    """Like _kv_chunk_scan but also returns the row logsumexp.
+
+    Positions are iota-derived: q rows are q_start..q_start+S-1, kv
+    columns 0..T-1 (all our flash uses attend over full prefixes).
+    """
+    B, S, Kv, G, Dh = qf.shape
+    n_chunks = k.shape[1] // chunk
+    q_pos = q_start + jnp.arange(S)
+
+    def body(carry, ic):
+        m, l, acc = carry
+        start = ic * chunk
+        kc = lax.dynamic_slice_in_dim(k, start, chunk, 1).astype(jnp.float32)
+        vc = lax.dynamic_slice_in_dim(v, start, chunk, 1).astype(jnp.float32)
+        kp = start + jnp.arange(chunk)
+        s = jnp.einsum("bskgd,btkd->bkgst", qf, kc)
+        s = _softcap(s, softcap)
+        mask = _allowed(q_pos, kp, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Kv, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Kv, G, S, Dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B,Kv,G,S)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 3, 1), jnp.moveaxis(lse, 3, 1)  # (B,S,…)
+
+
+def _flash_bwd_scan(qf, k, v, out, lse, do, delta, q_start, chunk,
+                    causal, window, softcap):
+    """Backward: recompute p per kv chunk; accumulate dq, dk, dv."""
+    B, S, Kv, G, Dh = qf.shape
+    n_chunks = k.shape[1] // chunk
+    q_pos = q_start + jnp.arange(S)
+    lse_t = jnp.moveaxis(lse, 1, 3)  # (B,Kv,G,S)
+    do_t = jnp.moveaxis(do, 1, 3)  # (B,Kv,G,S,Dh)
+    delta_t = jnp.moveaxis(delta, 1, 3)  # (B,Kv,G,S)
+
+    def body(dq, ic):
+        start = ic * chunk
+        kc = lax.dynamic_slice_in_dim(k, start, chunk, 1).astype(jnp.float32)
+        vc = lax.dynamic_slice_in_dim(v, start, chunk, 1).astype(jnp.float32)
+        kp = start + jnp.arange(chunk)
+        s_raw = jnp.einsum("bskgd,btkd->bkgst", qf, kc)
+        s = _softcap(s_raw, softcap)
+        mask = _allowed(q_pos, kp, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse_t[..., None])  # (B,Kv,G,S,T)
+        dv_c = jnp.einsum("bkgst,bkgsd->btkd", p, do_t)
+        dp = jnp.einsum("bkgsd,btkd->bkgst", do_t, vc)
+        ds = p * (dp - delta_t[..., None])
+        if softcap and softcap > 0:
+            th = jnp.tanh(s_raw / softcap)
+            ds = ds * (1.0 - th * th)
+        ds = jnp.where(mask[None, None, None], ds, 0.0)
+        dq_c = jnp.einsum("bkgst,btkd->bskgd", ds, kc)
+        dk_c = jnp.einsum("bkgst,bskgd->btkd", ds, qf)
+        return dq + dq_c, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, S, Kv, G, Dh), jnp.float32)
+    dq, (dk_chunks, dv_chunks) = lax.scan(
+        body, dq0, jnp.arange(n_chunks))
+    # dk/dv stacked per chunk: (n_chunks, B, chunk, Kv, Dh)
+    T = k.shape[1]
+    dk = jnp.moveaxis(dk_chunks, 0, 1).reshape(B, T, Kv, Dh)
+    dv = jnp.moveaxis(dv_chunks, 0, 1).reshape(B, T, Kv, Dh)
+    return dq, dk, dv
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(
+    q, k, v, causal=True, window=0, softcap=0.0, kv_chunk=1024,
+    q_chunk=0,
+):
+    """Memory-O(S) attention with a flash-style custom VJP (GQA-aware).
+
+    Saves only (out, logsumexp); the backward pass recomputes scores
+    chunk-by-chunk — no (B,H,S,T) residuals (EXPERIMENTS.md §Perf).
+    Assumes q rows are positions 0..S-1 over kv columns 0..T-1 with
+    S == T (training/prefill self-attention).
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, softcap,
+                             kv_chunk, q_chunk)
+    return out
+
+
+def _scaled(q):
+    Dh = q.shape[-1]
+    return q.astype(jnp.float32) / jnp.sqrt(Dh).astype(jnp.float32)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, softcap, kv_chunk, q_chunk):
+    B, S, H, Dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qf = _scaled(q).reshape(B, S, Kv, G, Dh)
+    kv_chunk = min(kv_chunk, k.shape[1])
+    if k.shape[1] % kv_chunk:
+        raise ValueError(
+            f"flash attention needs T % kv_chunk == 0, got "
+            f"T={k.shape[1]}, kv_chunk={kv_chunk}"
+        )
+    if q_chunk and S > q_chunk:
+        nq = S // q_chunk
+        qb = jnp.moveaxis(qf.reshape(B, nq, q_chunk, Kv, G, Dh), 1, 0)
+
+        def one(args):
+            qi, iq = args
+            return _flash_fwd_scan(qi, k, v, iq * q_chunk, kv_chunk,
+                                   causal, window, softcap)
+
+        outs, lses = lax.map(one, (qb, jnp.arange(nq)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Kv, G, Dh)
+        lse = jnp.moveaxis(lses, 0, 1).reshape(B, S, Kv, G)
+    else:
+        out, lse = _flash_fwd_scan(qf, k, v, 0, kv_chunk, causal,
+                                   window, softcap)
+        lse = lse.reshape(B, S, Kv, G)
+        out = out.reshape(B, S, Kv, G, Dh)
+    return out.reshape(B, S, H, Dh).astype(q.dtype), lse
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, softcap, kv_chunk, q_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, softcap,
+                               kv_chunk, q_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, softcap, kv_chunk, q_chunk, res, g):
+    q, k, v, out, lse = res
+    B, S, H, Dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    kv_chunk = min(kv_chunk, k.shape[1])
+    qf = _scaled(q).reshape(B, S, Kv, G, Dh)
+    do = g.astype(jnp.float32).reshape(B, S, Kv, G, Dh)
+    of = out.astype(jnp.float32).reshape(B, S, Kv, G, Dh)
+    delta = jnp.sum(do * of, axis=-1)  # (B,S,Kv,G)
+
+    if q_chunk and S > q_chunk:
+        nq = S // q_chunk
+
+        def reshuf(x):
+            return jnp.moveaxis(
+                x.reshape((B, nq, q_chunk) + x.shape[2:]), 1, 0)
+
+        def one(args):
+            qi, oi, doi, li, di, iq = args
+            return _flash_bwd_scan(qi, k, v, oi, li, doi, di,
+                                   iq * q_chunk, kv_chunk, causal,
+                                   window, softcap)
+
+        dqs, dks, dvs = lax.map(
+            one,
+            (reshuf(qf), reshuf(of), reshuf(do),
+             reshuf(lse.reshape(B, S, Kv, G)),
+             reshuf(delta), jnp.arange(nq)),
+        )
+        dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, Kv, G, Dh)
+        dk = dks.sum(axis=0)
+        dv = dvs.sum(axis=0)
+    else:
+        dq, dk, dv = _flash_bwd_scan(
+            qf, k, v, of, lse.reshape(B, S, Kv, G), do, delta, 0,
+            kv_chunk, causal, window, softcap,
+        )
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    dq = (dq * scale).reshape(B, S, H, Dh).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ----------------------------------------------------------------------
+# decode (single new token against a cache)
+# ----------------------------------------------------------------------
+def ring_slot_positions(
+    cache_size: int, length: jnp.ndarray, window: int
+) -> jnp.ndarray:
+    """Absolute position held in each ring-buffer slot.
+
+    Slot s holds position p = s + w·⌊(L−1−s)/w⌋ (negative ⇒ empty).
+    For full (non-ring) caches pass window = cache_size.
+    """
+    s = jnp.arange(cache_size)
+    return s + window * ((length - 1 - s) // window)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, Dh) — rope already applied
+    k_cache: jnp.ndarray,  # (B, C, Kv, Dh)
+    v_cache: jnp.ndarray,
+    q_pos: jnp.ndarray,  # scalar current position (= length − 1)
+    k_pos: jnp.ndarray,  # (C,) absolute positions per slot
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    B, _, H, Dh = q.shape
+    Kv = k_cache.shape[2]
+    G = H // Kv
+    qf = q.astype(jnp.float32).reshape(B, Kv, G, Dh)
+    scale = 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf * scale, k_cache.astype(jnp.float32))
+    s = _softcap(s, softcap)
+    ok = k_pos >= 0
+    ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)

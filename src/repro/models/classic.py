@@ -1,0 +1,94 @@
+"""The paper's own evaluation models (§V-A):
+
+  * logistic regression for MNIST (784 → 10),
+  * a CNN with 6 convolution layers and 3 fully-connected layers for
+    CIFAR-10 (32×32×3 → 10).
+
+Pure JAX (init/apply pairs + softmax-CE loss), used by the simulation
+benchmarks (Figs. 5/6, Table I) and the HGC training examples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_logreg(rng, n_features: int = 784, n_classes: int = 10) -> Dict:
+    return {
+        "w": jax.random.normal(rng, (n_features, n_classes)) * 0.01,
+        "b": jnp.zeros((n_classes,)),
+    }
+
+
+def apply_logreg(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+
+def init_cnn(rng, in_ch: int = 3, n_classes: int = 10) -> Dict:
+    """6 conv layers + 3 FC layers (paper's CIFAR-10 model)."""
+    chans = [in_ch, 32, 32, 64, 64, 128, 128]
+    ks = jax.random.split(rng, 9)
+    params: Dict = {}
+    for i in range(6):
+        fan_in = chans[i] * 9
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(ks[i], (3, 3, chans[i], chans[i + 1]))
+            * jnp.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((chans[i + 1],)),
+        }
+    # 32×32 → pool after conv1, conv3, conv5 → 4×4×128 = 2048
+    dims = [2048, 256, 128, n_classes]
+    for i in range(3):
+        params[f"fc{i}"] = {
+            "w": jax.random.normal(ks[6 + i], (dims[i], dims[i + 1]))
+            * jnp.sqrt(2.0 / dims[i]),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+    return params
+
+
+def apply_cnn(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 32, 32, 3) → logits (B, 10)."""
+
+    def conv(p, h):
+        return jax.lax.conv_general_dilated(
+            h, p["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p["b"]
+
+    def pool(h):
+        return jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    h = x
+    for i in range(6):
+        h = jax.nn.relu(conv(params[f"conv{i}"], h))
+        if i % 2 == 1:
+            h = pool(h)
+    h = h.reshape(h.shape[0], -1)
+    for i in range(3):
+        h = h @ params[f"fc{i}"]["w"] + params[f"fc{i}"]["b"]
+        if i < 2:
+            h = jax.nn.relu(h)
+    return h
+
+
+def xent_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return (logits.argmax(-1) == labels).mean()
+
+
+def grad_fn(apply, params, x, y):
+    """Gradient of mean CE loss — the g_k of paper eq. (2)."""
+
+    def loss(p):
+        return xent_loss(apply(p, x), y)
+
+    return jax.grad(loss)(params)

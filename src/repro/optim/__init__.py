@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+    momentum,
+    sgd,
+)

@@ -1,0 +1,193 @@
+"""First-party optimizers (no optax on the box).
+
+``Optimizer`` is a pair of pure functions:
+    init(params)                      → state pytree
+    update(grads, state, params, lr)  → (updates, new_state)
+with updates applied as ``p + u``.  Gradient clipping and schedules are
+composed by the train step builder.
+
+``adafactor`` (factored second moments) is what makes the 400B MoE's
+optimizer state fit 16 GB/chip HBM in the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr_at
+
+
+# ----------------------------------------------------------------------
+def sgd() -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        def u(g, p):
+            return -(lr * (g.astype(jnp.float32)
+                           + weight_decay * p.astype(jnp.float32))
+                     ).astype(p.dtype)
+
+        return jax.tree.map(u, grads, params), state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        m = jax.tree.map(
+            lambda mv, g: beta * mv + g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        upd = jax.tree.map(
+            lambda mv, p: -(lr * (mv + weight_decay
+                                  * p.astype(jnp.float32))).astype(p.dtype),
+            m, params,
+        )
+        return upd, {"m": m}
+
+    return Optimizer("momentum", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        t = state["t"] + 1
+        m = jax.tree.map(
+            lambda mv, g: b1 * mv + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def u(mv, vv, p):
+            step = (mv / c1) / (jnp.sqrt(vv / c2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return -(lr * step).astype(p.dtype)
+
+        return (
+            jax.tree.map(u, m, v, params),
+            {"m": m, "v": v, "t": t},
+        )
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(eps: float = 1e-30, clip_thresh: float = 1.0) -> Optimizer:
+    """Factored second moments (Shazeer & Stern), β1 = 0.
+
+    Matrices (ndim ≥ 2) store one row- and one column- accumulator over
+    the trailing two dims instead of a full second-moment tensor —
+    O(n+m) versus O(n·m) state.
+    """
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def make(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "acc": jax.tree.map(make, params,
+                                is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr, weight_decay=0.0):
+        t = state["t"] + 1
+        beta2 = 1.0 - t.astype(jnp.float32) ** -0.8
+
+        def upd(g, acc, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(p):
+                vr = beta2 * acc["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * acc["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                step = gf / jnp.sqrt(vhat + eps)
+                new_acc = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * acc["v"] + (1 - beta2) * g2
+                step = gf / jnp.sqrt(v + eps)
+                new_acc = {"v": v}
+            # update clipping (RMS ≤ clip_thresh), as in the paper
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_thresh)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-(lr * step)).astype(p.dtype), new_acc
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        outs = [upd(g, a, p) for g, a, p in zip(flat_g, flat_a, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_acc = treedef.unflatten([o[1] for o in outs])
+        return updates, {"acc": new_acc, "t": t}
+
+    return Optimizer("adafactor", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {
+        "sgd": sgd,
+        "momentum": momentum,
+        "adamw": adamw,
+        "adafactor": adafactor,
+    }[name](**kw)

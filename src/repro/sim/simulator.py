@@ -1,0 +1,164 @@
+"""Paper-evaluation simulator (§V): full training runs of every scheme
+on the paper's heterogeneous cluster, with sampled per-iteration times.
+
+Two modes:
+  * ``simulate_times``    — iteration times only (Fig. 8, comm loads),
+  * ``simulate_training`` — real model training (logistic regression /
+    CNN on the synthetic MNIST/CIFAR-like data) where each iteration's
+    gradient is the scheme's actual aggregate (exact for coded schemes,
+    partial for Greedy) and wall-clock advances by the sampled runtime
+    (Figs. 5/6, Table I).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime_model import ClusterParams
+from repro.core.schemes import Scheme, make_scheme
+from repro.core.topology import Topology
+from repro.data.pipeline import mnist_like, cifar_like, split_K_parts
+from repro.models import classic
+
+
+@dataclasses.dataclass
+class TrainingTrace:
+    scheme: str
+    iter_times_ms: np.ndarray  # (T,)
+    losses: np.ndarray  # (T,)
+    accuracies: np.ndarray  # (n_evals,)
+    eval_times_h: np.ndarray  # cumulative hours at each eval
+    eval_iters: np.ndarray
+
+    @property
+    def total_time_h(self) -> float:
+        return float(self.iter_times_ms.sum() / 3.6e6)
+
+    def time_to_accuracy(self, target: float) -> Optional[float]:
+        hits = np.flatnonzero(self.accuracies >= target)
+        return float(self.eval_times_h[hits[0]]) if len(hits) else None
+
+
+def simulate_times(
+    scheme: Scheme,
+    params: ClusterParams,
+    iters: int,
+    seed: int = 0,
+) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    out = np.empty(iters)
+    for t in range(iters):
+        sample = params.sample_iteration(rng, scheme.load)
+        out[t] = scheme.iteration(sample).time
+    return out
+
+
+def _make_model(dataset: str, seed: int):
+    rng = jax.random.PRNGKey(seed)
+    if dataset == "mnist":
+        p = classic.init_logreg(rng)
+        return p, classic.apply_logreg
+    p = classic.init_cnn(rng)
+    return p, classic.apply_cnn
+
+
+def simulate_training(
+    scheme_name: str,
+    params: ClusterParams,
+    dataset: str = "mnist",
+    non_iid_level: int = 1,
+    K: int = 40,
+    iters: int = 500,
+    lr: float = 0.05,
+    batch_per_part: int = 64,
+    eval_every: int = 20,
+    n_data: int = 8_000,
+    n_eval: int = 1_000,
+    seed: int = 0,
+    s_e: int = 1,
+    s_w: int = 1,
+) -> TrainingTrace:
+    """One full training run of one scheme (Figs. 5/6 & Table I)."""
+    topo = params.topo
+    scheme = make_scheme(
+        scheme_name, topo, K, s_e=s_e, s_w=s_w, params=params, seed=seed
+    )
+    x, y = (mnist_like if dataset == "mnist" else cifar_like)(
+        n_data + n_eval, seed=seed
+    )
+    x_eval, y_eval = x[n_data:], y[n_data:]
+    parts = split_K_parts(
+        x[:n_data], y[:n_data], K, non_iid_level, seed=seed
+    )
+    model_params, apply = _make_model(dataset, seed)
+    flat, treedef = jax.tree.flatten(model_params)
+    sizes = [int(np.prod(p.shape)) for p in flat]
+
+    def to_vec(tree):
+        return jnp.concatenate(
+            [jnp.ravel(l) for l in jax.tree.leaves(tree)]
+        )
+
+    def from_vec(vec):
+        leaves = []
+        off = 0
+        for p, s in zip(flat, sizes):
+            leaves.append(vec[off : off + s].reshape(p.shape))
+            off += s
+        return jax.tree.unflatten(treedef, leaves)
+
+    @jax.jit
+    def part_grads(p, xs, ys):
+        """Stacked per-part gradient matrix g_parts (K, dim)."""
+
+        def one(xk, yk):
+            return to_vec(classic.grad_fn(apply, p, xk, yk))
+
+        return jax.vmap(one)(xs, ys)
+
+    @jax.jit
+    def eval_acc(p):
+        return classic.accuracy(apply(p, x_eval), y_eval)
+
+    # pre-stack part minibatches per iteration from each part
+    rng = np.random.default_rng(seed + 1)
+    px = np.stack([p[0] for p in parts])  # (K, n_k, ...)
+    py = np.stack([p[1] for p in parts])
+    n_per = px.shape[1]
+
+    times = np.empty(iters)
+    losses = np.empty(iters)
+    accs: List[float] = []
+    acc_times: List[float] = []
+    acc_iters: List[int] = []
+    cum_ms = 0.0
+    for t in range(iters):
+        sample = params.sample_iteration(rng, scheme.load)
+        outcome = scheme.iteration(sample)
+        times[t] = outcome.time
+        cum_ms += outcome.time
+        sel = rng.integers(0, n_per, size=min(batch_per_part, n_per))
+        g_parts = np.asarray(part_grads(
+            model_params, jnp.asarray(px[:, sel]), jnp.asarray(py[:, sel])
+        ))
+        agg = scheme.gradient(g_parts, outcome) / max(len(parts), 1)
+        model_params = from_vec(
+            to_vec(model_params) - lr * jnp.asarray(agg)
+        )
+        losses[t] = float(np.linalg.norm(agg))
+        if t % eval_every == 0 or t == iters - 1:
+            accs.append(float(eval_acc(model_params)))
+            acc_times.append(cum_ms / 3.6e6)
+            acc_iters.append(t)
+    return TrainingTrace(
+        scheme=scheme_name,
+        iter_times_ms=times,
+        losses=losses,
+        accuracies=np.asarray(accs),
+        eval_times_h=np.asarray(acc_times),
+        eval_iters=np.asarray(acc_iters),
+    )

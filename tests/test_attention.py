@@ -1,0 +1,134 @@
+"""Attention machinery: chunked == dense, RoPE, windows, decode, M-RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+
+def _rand(rng, *shape):
+    return jax.random.normal(rng, shape, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    S=st.sampled_from([8, 16, 32]),
+    Kv=st.sampled_from([1, 2]),
+    G=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 4, 8]),
+    seed=st.integers(0, 100),
+)
+def test_chunked_equals_dense(B, S, Kv, G, causal, window, seed):
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 3)
+    H, Dh = Kv * G, 16
+    q = _rand(ks[0], B, S, H, Dh)
+    k = _rand(ks[1], B, S, Kv, Dh)
+    v = _rand(ks[2], B, S, Kv, Dh)
+    pos = jnp.arange(S)
+    if not causal and window:
+        window = 0  # windows only make sense with causality here
+    dense = A.dense_attention(
+        q, k, v, pos[None], pos[None], causal=causal, window=window
+    )
+    chunk = A.chunked_attention(
+        q, k, v, pos, pos, causal=causal, window=window, kv_chunk=8
+    )
+    np.testing.assert_allclose(dense, chunk, rtol=2e-5, atol=2e-5)
+
+
+def test_q_chunked_equals_dense():
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 3)
+    B, S, Kv, G, Dh = 1, 64, 2, 2, 8
+    q = _rand(ks[0], B, S, Kv * G, Dh)
+    k = _rand(ks[1], B, S, Kv, Dh)
+    v = _rand(ks[2], B, S, Kv, Dh)
+    pos = jnp.arange(S)
+    dense = A.dense_attention(q, k, v, pos[None], pos[None], causal=True)
+    qc = A.chunked_attention(
+        q, k, v, pos, pos, causal=True, kv_chunk=16, q_chunk=16
+    )
+    np.testing.assert_allclose(dense, qc, rtol=2e-5, atol=2e-5)
+
+
+def test_rope_rotation_invariance():
+    """RoPE preserves norms and relative-position dot products."""
+    rng = jax.random.PRNGKey(1)
+    x = _rand(rng, 1, 8, 2, 16)
+    pos = jnp.arange(8)[None]
+    r = A.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(r, axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = _rand(jax.random.PRNGKey(2), 1, 1, 1, 16)
+    k = _rand(jax.random.PRNGKey(3), 1, 1, 1, 16)
+    dots = []
+    for p in [0, 5, 11]:
+        qr = A.apply_rope(q, jnp.array([[p]]), 10_000.0)
+        kr = A.apply_rope(k, jnp.array([[p + 3]]), 10_000.0)
+        dots.append(float(jnp.sum(qr * kr)))
+    np.testing.assert_allclose(dots, dots[0] * np.ones(3), rtol=1e-4)
+
+
+def test_mrope_sections():
+    """M-RoPE with identical position streams reduces to plain RoPE."""
+    rng = jax.random.PRNGKey(4)
+    x = _rand(rng, 2, 8, 2, 16)
+    pos = jnp.arange(8)[None].repeat(2, 0)
+    pos3 = jnp.broadcast_to(pos, (3, 2, 8))
+    plain = A.apply_rope(x, pos, 10_000.0)
+    mro = A.apply_rope(x, pos3, 10_000.0, sections=(2, 3, 3))
+    np.testing.assert_allclose(plain, mro, rtol=1e-5, atol=1e-6)
+    # distinct streams ⇒ different embedding
+    pos3b = pos3.at[1].add(5)
+    mro2 = A.apply_rope(x, pos3b, 10_000.0, sections=(2, 3, 3))
+    assert not np.allclose(mro, mro2)
+
+
+def test_ring_slot_positions():
+    # cache of 4 slots, length 10 ⇒ positions 6..9 at slots 2,3,0,1
+    got = A.ring_slot_positions(4, jnp.asarray(10), 4)
+    np.testing.assert_array_equal(got, [8, 9, 6, 7])
+    # shorter than window: identity with empties negative
+    got = A.ring_slot_positions(4, jnp.asarray(2), 4)
+    assert got[0] == 0 and got[1] == 1 and got[2] < 0 and got[3] < 0
+
+
+def test_decode_matches_dense_last_row():
+    """decode_attention(q_last) == dense attention's last position."""
+    rng = jax.random.PRNGKey(5)
+    ks = jax.random.split(rng, 3)
+    B, S, Kv, G, Dh = 2, 12, 2, 2, 8
+    q = _rand(ks[0], B, S, Kv * G, Dh)
+    k = _rand(ks[1], B, S, Kv, Dh)
+    v = _rand(ks[2], B, S, Kv, Dh)
+    pos = jnp.arange(S)
+    dense = A.dense_attention(q, k, v, pos[None], pos[None], causal=True)
+    dec = A.decode_attention(
+        q[:, -1:], k, v, jnp.asarray(S - 1), pos
+    )
+    np.testing.assert_allclose(dense[:, -1:], dec, rtol=2e-5, atol=2e-5)
+
+
+def test_softcap_bounds_scores():
+    rng = jax.random.PRNGKey(6)
+    ks = jax.random.split(rng, 3)
+    q = _rand(ks[0], 1, 8, 2, 8) * 100
+    k = _rand(ks[1], 1, 8, 2, 8) * 100
+    v = _rand(ks[2], 1, 8, 2, 8)
+    pos = jnp.arange(8)
+    out_cap = A.dense_attention(
+        q, k, v, pos[None], pos[None], causal=True, softcap=30.0
+    )
+    out_plain = A.dense_attention(
+        q, k, v, pos[None], pos[None], causal=True
+    )
+    assert jnp.all(jnp.isfinite(out_cap))
+    assert not np.allclose(out_cap, out_plain)

@@ -1,0 +1,159 @@
+"""Checkpoint store, data pipeline, compression, elastic replan."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore, config_hash
+from repro.core.runtime_model import ClusterParams, paper_cluster
+from repro.core.topology import Topology
+from repro.data.pipeline import (
+    TokenStream,
+    cifar_like,
+    mnist_like,
+    split_K_parts,
+)
+from repro.dist import compression
+from repro.dist.elastic import replan, shrink_topology, StragglerDetector
+
+
+# ---------------------------- checkpoints -----------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2, cfg_hash="abc")
+    state = {
+        "params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+        "opt": {"m": np.zeros(3), "t": np.int32(7)},
+        "nested": [np.ones(2), {"x": np.float64(3.5)}],
+    }
+    store.save(10, state, extra={"streams": [{"seed": 1, "step": 5}]})
+    step, got, extra = store.restore()
+    assert step == 10
+    np.testing.assert_array_equal(got["params"]["w"], state["params"]["w"])
+    np.testing.assert_array_equal(got["nested"][0], np.ones(2))
+    assert extra["streams"][0]["step"] == 5
+
+
+def test_checkpoint_keep_n_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, {"x": np.ones(1) * s})
+    assert store.manifest()["steps"] == [3, 4]
+    assert not os.path.exists(str(tmp_path) + "/step_0000000001")
+    step, got, _ = store.restore()
+    assert step == 4 and got["x"][0] == 4.0
+
+
+def test_checkpoint_config_hash_mismatch(tmp_path):
+    s1 = CheckpointStore(str(tmp_path), cfg_hash="aaa")
+    s1.save(1, {"x": np.ones(1)})
+    s2 = CheckpointStore(str(tmp_path), cfg_hash="bbb")
+    with pytest.raises(ValueError):
+        s2.restore()
+
+
+def test_checkpoint_restore_specific_step(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=5)
+    for s in (5, 10):
+        store.save(s, {"x": np.ones(1) * s})
+    step, got, _ = store.restore(step=5)
+    assert step == 5 and got["x"][0] == 5.0
+
+
+# ---------------------------- data pipeline ---------------------------
+def test_token_stream_deterministic_resume():
+    a = TokenStream(vocab=100, batch=2, seq_len=8, seed=3)
+    batches = [a.next_batch() for _ in range(4)]
+    b = TokenStream(vocab=100, batch=2, seq_len=8, seed=3)
+    b.load_state_dict({"seed": 3, "step": 2})
+    np.testing.assert_array_equal(
+        b.next_batch()["tokens"], batches[2]["tokens"]
+    )
+
+
+def test_non_iid_levels_restrict_classes():
+    x, y = mnist_like(2000, seed=0)
+    for level, max_classes in ((1, 10), (2, 5), (3, 2)):
+        parts = split_K_parts(x, y, K=10, non_iid_level=level, seed=1)
+        assert len(parts) == 10
+        worst = max(len(np.unique(py)) for _, py in parts)
+        assert worst <= max_classes + 3  # refill slack for exhausted classes
+        if level == 3:
+            typical = np.median([len(np.unique(py)) for _, py in parts])
+            assert typical <= 3
+
+
+def test_parts_are_disjoint_and_cover():
+    x, y = mnist_like(1000, seed=2)
+    parts = split_K_parts(x, y, K=8, non_iid_level=1, seed=0)
+    sizes = [len(py) for _, py in parts]
+    assert all(s == sizes[0] for s in sizes)
+    assert cifar_like(100)[0].shape == (100, 32, 32, 3)
+
+
+# ---------------------------- compression -----------------------------
+def test_int8_quantization_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)) * 3.0, jnp.float32)
+    q, s, meta = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s, meta)
+    assert back.shape == x.shape
+    err = np.max(np.abs(np.asarray(back - x)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127 * 1.01
+
+
+def test_error_feedback_unbiased_over_time():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    res = jax.tree.map(lambda x: jnp.zeros_like(x), {"g": g})
+    total_sent = jnp.zeros_like(g)
+    T = 30
+    for _ in range(T):
+        q, res = compression.compress_error_feedback({"g": g}, res)
+        total_sent = total_sent + compression.dequantize_tree(q)["g"]
+    np.testing.assert_allclose(
+        np.asarray(total_sent / T), np.asarray(g), atol=2e-2
+    )
+
+
+def test_quantize_tree_roundtrip_shapes():
+    tree = {"a": jnp.ones((3, 5)), "b": {"c": jnp.arange(7, dtype=jnp.float32)}}
+    q = compression.quantize_tree(tree)
+    back = compression.dequantize_tree(q)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.shape == y.shape
+
+
+# ---------------------------- elastic ---------------------------------
+def test_shrink_topology_removes_nodes():
+    params = paper_cluster("mnist")
+    small = shrink_topology(params, dead_edges=[3],
+                            dead_workers=[(0, 0), (1, 5)])
+    assert small.topo.n == 3
+    assert small.topo.m == (9, 9, 10)
+    assert small.c.shape == (28,)
+
+
+def test_replan_after_failure_still_decodes():
+    params = paper_cluster("mnist")
+    surv = shrink_topology(params, dead_edges=[3])
+    plan = replan(surv, K=40)
+    code = plan.code
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(code.K, 5))
+    out = code.simulate_iteration(g)
+    np.testing.assert_allclose(out, g.sum(0), rtol=1e-8)
+
+
+def test_straggler_detector_tracks_drift():
+    params = paper_cluster("mnist")
+    det = StragglerDetector(params, alpha=0.5)
+    base = params.expected_worker_total(1.0)
+    slow = base.copy()
+    slow[0] += 500.0  # worker 0 got persistently slower
+    for _ in range(20):
+        det.observe(slow)
+    upd = det.updated_params(D_ref=1.0)
+    assert upd.c[0] > params.c[0] + 400
+    assert np.allclose(upd.c[1:], params.c[1:], atol=1.0)

@@ -1,0 +1,131 @@
+"""Property-based tests of the HGC scheme (paper §III, Algorithm 1).
+
+System invariant under test: for ANY straggler pattern within the
+(s_e, s_w) tolerance, the master decodes the EXACT full gradient.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tradeoff
+from repro.core.hgc import HGCCode
+from repro.core.topology import Tolerance, Topology
+
+
+def _feasible_cases():
+    cases = []
+    for m in [(3, 3, 3), (4, 4), (2, 4, 6), (5, 5, 5, 5), (10, 10, 10, 10)]:
+        topo = Topology(m=m)
+        for s_e in range(min(topo.n, 3)):
+            for s_w in range(min(topo.m_min, 3)):
+                tol = Tolerance(s_e, s_w)
+                if tradeoff.feasible(topo, tol):
+                    cases.append((topo, tol))
+    return cases
+
+
+CASES = _feasible_cases()
+_CODE_CACHE = {}
+
+
+def _code_for(idx):
+    if idx not in _CODE_CACHE:
+        topo, tol = CASES[idx]
+        _CODE_CACHE[idx] = HGCCode.build(topo, tol, seed=7)
+    return _CODE_CACHE[idx]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    idx=st.integers(min_value=0, max_value=len(CASES) - 1),
+    data=st.data(),
+)
+def test_exact_recovery_any_tolerated_pattern(idx, data):
+    code = _code_for(idx)
+    topo, tol = code.topo, code.tol
+    # draw a straggler pattern within tolerance
+    edge_str = data.draw(
+        st.lists(
+            st.integers(0, topo.n - 1),
+            max_size=tol.s_e,
+            unique=True,
+        )
+    )
+    worker_str = []
+    for i in range(topo.n):
+        worker_str.append(
+            data.draw(
+                st.lists(
+                    st.integers(0, topo.m[i] - 1),
+                    max_size=tol.s_w,
+                    unique=True,
+                )
+            )
+        )
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    g = rng.normal(size=(code.K, 5))
+    out = code.simulate_iteration(g, edge_str, worker_str)
+    np.testing.assert_allclose(out, g.sum(axis=0), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    idx=st.integers(min_value=0, max_value=len(CASES) - 1),
+    seed=st.integers(0, 2**31),
+)
+def test_collapsed_weights_equal_pipeline(idx, seed):
+    """λ_ij = a_i c^i_j collapsed view ≡ the two-stage decode."""
+    code = _code_for(idx)
+    topo, tol = code.topo, code.tol
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(code.K, 3))
+    # worst-case pattern: max stragglers everywhere
+    fast_edges = list(range(tol.s_e, topo.n))
+    fast_workers = [
+        list(range(tol.s_w, topo.m[i])) for i in range(topo.n)
+    ]
+    lam = code.collapsed_weights(fast_edges, fast_workers)
+    total = np.zeros(3)
+    for i in range(topo.n):
+        for j in range(topo.m[i]):
+            total += lam[topo.flat_index(i, j)] * code.worker_encode(i, j, g)
+    np.testing.assert_allclose(total, g.sum(axis=0), rtol=1e-9, atol=1e-9)
+
+
+def test_load_matches_theorem1_all_cases():
+    for idx in range(len(CASES)):
+        code = _code_for(idx)
+        frac = tradeoff.min_load_fraction(code.topo, code.tol)
+        assert code.load == frac * code.K
+
+
+def test_worker_only_computes_assigned_parts():
+    """Encoding coefficients are zero outside the assignment supports."""
+    for idx in range(len(CASES)):
+        code = _code_for(idx)
+        for i in range(code.topo.n):
+            for j in range(code.topo.m[i]):
+                coeff = code.worker_coeffs(i, j)
+                assigned = set(code.assignment.worker_parts(i, j))
+                for k in range(code.K):
+                    if k not in assigned:
+                        assert coeff[k] == 0.0
+
+
+def test_beyond_tolerance_fails():
+    topo = Topology.uniform(3, 3)
+    code = HGCCode.build(topo, Tolerance(1, 1), K=9)
+    with pytest.raises(Exception):
+        code.master_decode_weights([0])  # only 1 < f_e = 2 edges
+
+
+def test_frc_construction_exact_and_binary():
+    topo = Topology.uniform(4, 4)
+    code = HGCCode.build(topo, Tolerance(1, 1), K=8, construction="frc")
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(8, 4))
+    out = code.simulate_iteration(g, [3], [[0], [1], [2], []])
+    np.testing.assert_allclose(out, g.sum(axis=0), rtol=1e-12)
+    # FRC decode weights are exactly {0, 1} — bf16-safe at scale
+    w = code.master_decode_weights([0, 1, 2])
+    assert set(np.unique(w)).issubset({0.0, 1.0})

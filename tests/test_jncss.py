@@ -1,0 +1,128 @@
+"""JNCSS (Algorithm 2), Theorem 2 optimality, Theorem 3 bound, §IV-B cases."""
+import numpy as np
+import pytest
+
+from repro.core import jncss
+from repro.core.runtime_model import ClusterParams, paper_cluster
+from repro.core.topology import Topology
+
+
+def _tiny_params(seed=0):
+    rng = np.random.default_rng(seed)
+    topo = Topology(m=(3, 3))
+    W, n = topo.total_workers, topo.n
+    return ClusterParams(
+        topo=topo,
+        c=rng.uniform(5, 50, W),
+        gamma=rng.uniform(0.01, 0.1, W),
+        tau_w=rng.uniform(20, 100, W),
+        p_w=rng.uniform(0.05, 0.5, W),
+        tau_e=rng.uniform(50, 500, n),
+        p_e=rng.uniform(0.05, 0.2, n),
+    )
+
+
+def test_theorem2_matches_brute_force():
+    """Algorithm 2 output equals exhaustive P1 optimum (Theorem 2)."""
+    for seed in range(5):
+        params = _tiny_params(seed)
+        fast = jncss.solve(params, K=12, require_feasible=False)
+        bf = jncss.brute_force(params, K=12)
+        assert fast.T_tol == pytest.approx(bf.T_tol, rel=1e-12)
+        assert (fast.s_e, fast.s_w) == (bf.s_e, bf.s_w)
+
+
+def test_vectorized_equals_reference_loops():
+    params = paper_cluster("mnist")
+    a = jncss.solve(params, K=40, require_feasible=False)
+    b = jncss.solve_reference(params, K=40)
+    assert a.T_tol == pytest.approx(b.T_tol)
+    assert (a.s_e, a.s_w) == (b.s_e, b.s_w)
+
+
+def test_selection_consistency():
+    """e/w selections reproduce T̂ when evaluated directly."""
+    params = paper_cluster("cifar")
+    res = jncss.solve(params, K=40)
+    assert sum(res.e) == params.topo.n - res.s_e
+    B = params.expected_worker_total(res.D)
+    A = params.expected_edge_upload()
+    worst = -np.inf
+    off = 0
+    for i in range(params.topo.n):
+        mi = params.topo.m[i]
+        if res.e[i]:
+            assert sum(res.w[i]) == mi - res.s_w
+            sel = [off + j for j in range(mi) if res.w[i][j]]
+            worst = max(worst, A[i] + max(B[j] for j in sel))
+        else:
+            assert sum(res.w[i]) == 0
+        off += mi
+    assert worst == pytest.approx(res.T_tol, rel=1e-12)
+
+
+def test_theorem3_bound_holds_empirically():
+    """E|T_tol − T̂| (Monte Carlo) ≤ the Theorem 3 bound."""
+    params = paper_cluster("mnist")
+    res = jncss.solve(params, K=40)
+    bound = jncss.theorem3_gap_bound(params, res, n_samples=2000, seed=1)
+    rng = np.random.default_rng(2)
+    gaps = []
+    from repro.core.runtime_model import kth_min
+
+    topo = params.topo
+    for _ in range(2000):
+        wt, eu, _ = params.sample_iteration(rng, res.D)
+        per_edge = []
+        off = 0
+        for i in range(topo.n):
+            mi = topo.m[i]
+            per_edge.append(
+                eu[i] + kth_min(wt[off : off + mi], mi - res.s_w)
+            )
+            off += mi
+        T = kth_min(np.array(per_edge), topo.n - res.s_e)
+        gaps.append(abs(T - res.T_tol))
+    assert np.mean(gaps) <= bound * 1.05  # MC slack
+
+
+def test_order_stat_factor():
+    assert jncss.order_stat_factor(10, 1) == pytest.approx(
+        np.sqrt(9 / 10), rel=1e-12
+    )
+    assert jncss.order_stat_factor(10, 10) == pytest.approx(
+        np.sqrt(9 / 10), rel=1e-12
+    )
+
+
+def test_homogeneous_case1_endpoint_optimality():
+    """§IV-B Case 1: corner optimum vs full-grid numeric minimum."""
+    c, K, n, m, gamma, t1, t2 = 10.0, 40, 4, 10, 0.05, 50.0, 100.0
+    se, sw, v = jncss.homogeneous_case1(c, K, n, m, gamma, t1, t2)
+    grid = [
+        jncss.case1_expected_runtime(a, b, c, K, n, m, gamma, t1, t2)
+        for a in range(n)
+        for b in range(m)
+    ]
+    # paper's claim: the corner minimum is the global minimum of eq (35)
+    assert v == pytest.approx(min(grid), rel=1e-9)
+
+
+def test_homogeneous_case2_endpoint_optimality():
+    c, K, n, m, t1, t2, p2 = 10.0, 40, 4, 10, 50.0, 100.0, 0.1
+    se, sw, v = jncss.homogeneous_case2(c, K, n, m, t1, t2, p2)
+    assert sw == 0
+    grid = [
+        jncss.case2_expected_runtime(a, c, K, n, m, t1, t2, p2)
+        for a in range(n)
+    ]
+    assert v == pytest.approx(min(grid), rel=1e-9)
+
+
+def test_jncss_improves_over_fixed_choice():
+    """On the paper's heterogeneous cluster, JNCSS ≤ any fixed (s_e,s_w)."""
+    params = paper_cluster("mnist")
+    res = jncss.solve(params, K=40, with_grid=True)
+    finite = res.grid[np.isfinite(res.grid)]
+    assert res.T_tol == pytest.approx(finite.min())
+    assert res.T_tol <= res.grid[1, 1] or not np.isfinite(res.grid[1, 1])

@@ -1,0 +1,88 @@
+"""Corollary 2 multilayer codes + partial-result (multi-message) coding."""
+import numpy as np
+import pytest
+
+from repro.core import partial as P
+from repro.core.hgc import HGCCode
+from repro.core.multilayer import MultiLayerCode, TreeNode, min_load_fraction
+from repro.core.topology import Tolerance, Topology
+
+
+def test_multilayer_bound_matches_corollary2():
+    assert min_load_fraction((2, 4, 8), (1, 1, 3)) == \
+        pytest.approx(2 * 2 * 4 / 64)
+
+
+def test_three_level_exact_recovery_no_stragglers():
+    tree = TreeNode.uniform((2, 2, 2))
+    code = MultiLayerCode.build(tree, s=(1, 1, 1), K=8, seed=0)
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(8, 5))
+    out = code.decode(g)
+    np.testing.assert_allclose(out, g.sum(0), rtol=1e-8, atol=1e-8)
+
+
+def test_three_level_load_meets_bound():
+    tree = TreeNode.uniform((2, 2, 2))
+    code = MultiLayerCode.build(tree, s=(1, 1, 1), K=8, seed=0)
+    # D/K = (2·2·2)/8 = 1 ⇒ D = 8 parts per worker
+    assert code.load == 8
+    code0 = MultiLayerCode.build(tree, s=(0, 0, 0), K=8, seed=0)
+    assert code0.load == 1  # no redundancy ⇒ 1 part per worker
+
+
+def test_two_level_multilayer_equals_hgc_load():
+    tree = TreeNode.uniform((3, 3))
+    ml = MultiLayerCode.build(tree, s=(1, 1), K=9, seed=1)
+    hgc = HGCCode.build(Topology.uniform(3, 3), Tolerance(1, 1), K=9)
+    assert ml.load == hgc.load == 4
+    rng = np.random.default_rng(1)
+    g = rng.normal(size=(9, 3))
+    np.testing.assert_allclose(ml.decode(g), g.sum(0), rtol=1e-8)
+
+
+# ----------------------------- partial results -------------------------
+@pytest.fixture(scope="module")
+def hgc_code():
+    return HGCCode.build(Topology.uniform(3, 3), Tolerance(1, 1), K=9,
+                         seed=0)
+
+
+def test_full_prefixes_decode_exactly(hgc_code):
+    code = hgc_code
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(code.K, 4))
+    D = code.load
+    for i in range(code.topo.n):
+        msgs = {
+            j: P.worker_prefix_messages(code, i, j, g)
+            for j in range(code.topo.m[i])
+        }
+        # full prefixes from the fastest f_w workers must decode G_i
+        out = P.edge_decode_from_prefixes(code, i, [D, D, 0], msgs)
+        assert out is not None
+        want = code.B.matrix[i] @ g
+        np.testing.assert_allclose(out, want, rtol=1e-7, atol=1e-8)
+
+
+def test_partial_prefixes_can_decode_early(hgc_code):
+    """With messages from ALL workers' partial prefixes, the edge can
+    decode before any single worker finishes everything — the
+    Ozfatura-style speedup the paper cites as combinable."""
+    code = hgc_code
+    D = code.load
+    # round-robin arrival: every worker completes part 1, then part 2, …
+    arrivals = [(j, t) for t in range(D) for j in range(3)]
+    n_needed = P.earliest_decode_progress(code, 0, arrivals)
+    assert 0 < n_needed < 2 * D  # earlier than 2 workers' full results
+    # and strictly fewer messages than full-HGC's f_w·D when spread out
+    assert n_needed <= 2 * D
+
+
+def test_insufficient_prefixes_return_none(hgc_code):
+    code = hgc_code
+    rng = np.random.default_rng(1)
+    g = rng.normal(size=(code.K, 2))
+    msgs = {0: P.worker_prefix_messages(code, 0, 0, g)[:1]}
+    out = P.edge_decode_from_prefixes(code, 0, [1, 0, 0], msgs)
+    assert out is None

@@ -1,0 +1,105 @@
+"""Runtime model §IV-A: distributions, expectations, order statistics."""
+import numpy as np
+import pytest
+
+from repro.core.runtime_model import (
+    ClusterParams,
+    expected_max_exponential,
+    expected_max_geometric,
+    kth_min,
+    paper_cluster,
+)
+from repro.core.topology import Topology
+
+
+def test_kth_min():
+    v = np.array([3.0, 4.0, 5.0, 6.0])
+    assert kth_min(v, 3) == 5.0  # paper's example: min_{3-th}{3,4,5,6} = 5
+    assert kth_min(v, 1) == 3.0
+    assert kth_min(v, 4) == 6.0
+    m = np.array([[3.0, 1.0, 2.0], [9.0, 7.0, 8.0]])
+    np.testing.assert_array_equal(kth_min(m, 2, axis=1), [2.0, 8.0])
+
+
+def test_sampled_expectations_match_model():
+    """Monte-Carlo means match E[T] = cD + 1/γ + 2τ_w/(1−p_w) + τ_e/(1−p_e)."""
+    params = ClusterParams.homogeneous(
+        Topology.uniform(2, 3), c=10.0, gamma=0.1, tau_w=50.0, p_w=0.2,
+        tau_e=100.0, p_e=0.1,
+    )
+    rng = np.random.default_rng(0)
+    D = 4.0
+    tot = np.zeros(params.topo.total_workers)
+    ups = np.zeros(params.topo.n)
+    N = 20000
+    for _ in range(N):
+        wt, eu, _ = params.sample_iteration(rng, D)
+        tot += wt
+        ups += eu
+    emp = tot / N
+    model = params.expected_worker_total(D)
+    np.testing.assert_allclose(emp, model, rtol=0.03)
+    np.testing.assert_allclose(
+        ups / N, params.expected_edge_upload(), rtol=0.03
+    )
+
+
+def test_variance_matches_model():
+    params = ClusterParams.homogeneous(
+        Topology.uniform(1, 2), c=5.0, gamma=0.05, tau_w=40.0, p_w=0.3,
+        tau_e=80.0, p_e=0.15,
+    )
+    rng = np.random.default_rng(1)
+    xs = np.stack(
+        [params.sample_iteration(rng, 2.0)[0] for _ in range(30000)]
+    )
+    np.testing.assert_allclose(
+        xs.var(axis=0), params.worker_total_variance(), rtol=0.06
+    )
+
+
+def test_geometric_distribution_definition():
+    """Pr(N = x) = p^{x−1}(1−p): mean must be 1/(1−p)."""
+    rng = np.random.default_rng(2)
+    p = 0.4
+    n = rng.geometric(1.0 - p, size=200000)
+    assert np.mean(n) == pytest.approx(1.0 / (1.0 - p), rel=0.02)
+
+
+def test_expected_max_approximations():
+    """The paper's §IV-B approximations are close to Monte Carlo."""
+    rng = np.random.default_rng(3)
+    gamma, k = 0.1, 30
+    mc = np.max(rng.exponential(1 / gamma, size=(20000, k)), axis=1).mean()
+    assert expected_max_exponential(gamma, k) == pytest.approx(mc, rel=0.15)
+    p, k = 0.2, 10
+    mc = np.max(
+        rng.geometric(1 - p, size=(20000, k)), axis=1
+    ).mean()
+    assert expected_max_geometric(p, k) == pytest.approx(mc, rel=0.25)
+
+
+def test_paper_cluster_composition():
+    params = paper_cluster("mnist")
+    assert params.topo.n == 4 and params.topo.total_workers == 40
+    # edge types: 1 strong + 2 normal + 1 weak
+    assert sorted(params.tau_e.tolist()) == [50.0, 100.0, 100.0, 500.0]
+    # per edge: 7 strong-compute (c=10), 3 weak-compute (c=50)
+    c0 = params.c[:10]
+    assert (c0 == 10.0).sum() == 7 and (c0 == 50.0).sum() == 3
+    cifar = paper_cluster("cifar")
+    assert set(np.unique(cifar.c)) == {100.0, 500.0}
+
+
+def test_shape_validation():
+    topo = Topology.uniform(2, 2)
+    with pytest.raises(ValueError):
+        ClusterParams(
+            topo=topo,
+            c=np.ones(3),  # wrong: W = 4
+            gamma=np.ones(4),
+            tau_w=np.ones(4),
+            p_w=np.ones(4) * 0.1,
+            tau_e=np.ones(2),
+            p_e=np.ones(2) * 0.1,
+        )

@@ -1,0 +1,92 @@
+"""Sharding-rule properties: every param/batch/cache spec the dryrun
+builds must satisfy pjit's divisibility requirement on BOTH production
+meshes for EVERY assigned architecture — without compiling anything.
+
+This is the fast guard for the multi-pod dry-run deliverable: a rule
+regression shows up here in seconds instead of in a 30-minute sweep.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import SHAPES, TrainConfig
+    from repro.configs.registry import ARCH_IDS, get_config, shape_applicable
+    from repro.dist import sharding as sh
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+
+    def axis_prod(mesh, entry):
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def check(spec_tree, abs_tree, mesh, what):
+        leaves_s = jax.tree.leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+        leaves_a = jax.tree.leaves(abs_tree)
+        assert len(leaves_s) == len(leaves_a), (what, "structure")
+        for s, a in zip(leaves_s, leaves_a):
+            for dim, entry in zip(a.shape, tuple(s)):
+                if entry is None:
+                    continue
+                n = axis_prod(mesh, entry)
+                assert dim % n == 0, (what, a.shape, s)
+
+    modes_checked = 0
+    for multi_pod in (False, True):
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            tcfg = TrainConfig(microbatch=32)
+            params_abs, opt_abs = steps_lib.abstract_state(cfg, tcfg)
+            for mode in ("2d", "dp_only"):
+                pspecs = sh.fit_pspecs(
+                    sh.params_pspecs(params_abs, cfg, mesh, mode=mode),
+                    params_abs, mesh)
+                check(pspecs, params_abs, mesh, (arch, mode, "params"))
+                ospecs = sh.fit_pspecs(
+                    sh.opt_state_pspecs(opt_abs, pspecs), opt_abs, mesh)
+                check(ospecs, opt_abs, mesh, (arch, mode, "opt"))
+                modes_checked += 1
+            for sname, shape in SHAPES.items():
+                ok, _ = shape_applicable(cfg, shape)
+                if not ok:
+                    continue
+                if shape.kind == "decode":
+                    cache_abs = steps_lib.abstract_cache(cfg, shape)
+                    cspecs = sh.fit_pspecs(
+                        sh.cache_pspecs(cache_abs, mesh), cache_abs, mesh)
+                    check(cspecs, cache_abs, mesh, (arch, sname, "cache"))
+                else:
+                    batch_abs = steps_lib.input_specs(cfg, shape)
+                    bsp = {k: v for k, v in
+                           sh.batch_pspecs(cfg, mesh).items()
+                           if k in batch_abs}
+                    bsp = sh.fit_pspecs(bsp, batch_abs, mesh)
+                    check(bsp, batch_abs, mesh, (arch, sname, "batch"))
+    print("SPECS_OK", modes_checked)
+    """
+)
+
+
+def test_all_specs_divide_on_both_meshes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SPECS_OK 40" in r.stdout  # 10 archs × 2 meshes × 2 modes

@@ -1,0 +1,89 @@
+"""Theorem 1 / Corollary 1 / Corollary 2 — computational trade-off."""
+import math
+from fractions import Fraction
+
+import pytest
+
+from repro.core import tradeoff
+from repro.core.topology import Tolerance, Topology
+
+
+def test_theorem1_reduces_to_single_layer():
+    # n = 1 edge ⇒ the conventional bound (s_w+1)/m  (paper eq 3).
+    topo = Topology(m=(8,))
+    tol = Tolerance(s_e=0, s_w=3)
+    assert tradeoff.min_load_fraction(topo, tol) == Fraction(4, 8)
+
+
+def test_theorem1_example1():
+    # Paper Example 1: 3 edges × 3 workers, s_e = s_w = 1, K = 9 ⇒ D = 4.
+    topo = Topology.uniform(3, 3)
+    tol = Tolerance(1, 1)
+    assert tradeoff.min_load_fraction(topo, tol) == Fraction(4, 9)
+    assert tradeoff.min_load(topo, tol, K=9) == 4
+    assert tradeoff.achievable_load(topo, tol, K=9) == 4
+
+
+def test_achievable_matches_lower_bound():
+    # eq (23): the HGC construction meets Theorem 1 with equality.
+    for m in [(4, 4), (2, 4, 6), (10, 10, 10, 10)]:
+        topo = Topology(m=m)
+        for s_e in range(topo.n):
+            for s_w in range(topo.m_min):
+                tol = Tolerance(s_e, s_w)
+                if not tradeoff.feasible(topo, tol):
+                    continue
+                K = tradeoff.compatible_K(topo, tol, at_least=8)
+                D = tradeoff.achievable_load(topo, tol, K)
+                assert Fraction(D, K) == tradeoff.min_load_fraction(topo, tol)
+
+
+def test_corollary1_strict_gap():
+    # Conventional single-layer coding strictly exceeds the optimum
+    # whenever the system is truly hierarchical (paper Corollary 1).
+    cases = [
+        (Topology.uniform(3, 3), Tolerance(1, 1)),
+        (Topology.uniform(4, 10), Tolerance(1, 1)),
+        (Topology.uniform(4, 10), Tolerance(2, 3)),
+        (Topology(m=(4, 6, 8)), Tolerance(1, 2)),
+    ]
+    for topo, tol in cases:
+        conv = tradeoff.conventional_load_fraction(topo, tol)
+        opt = tradeoff.min_load_fraction(topo, tol)
+        assert conv > opt, (topo, tol)
+
+
+def test_corollary2_multilayer():
+    # L-layer: D/K ≥ Π(s_l+1)/W; 2-layer case must agree with Theorem 1.
+    topo = Topology.uniform(4, 10)
+    tol = Tolerance(2, 3)
+    assert tradeoff.multilayer_min_load_fraction(
+        [tol.s_e, tol.s_w], topo.total_workers
+    ) == tradeoff.min_load_fraction(topo, tol)
+    assert tradeoff.multilayer_min_load_fraction([1, 2, 3], 120) == Fraction(
+        24, 120
+    )
+
+
+def test_feasibility_guard():
+    # Very skewed topology: tolerating the big edge leaves too few workers.
+    topo = Topology(m=(8, 1, 1))
+    assert not tradeoff.feasible(topo, Tolerance(1, 0))
+    assert tradeoff.feasible(topo, Tolerance(0, 0))
+
+
+def test_compatible_K_properties():
+    topo = Topology(m=(2, 3, 5))
+    tol = Tolerance(1, 1)
+    K = tradeoff.compatible_K(topo, tol, at_least=7)
+    assert K >= 7
+    D = tradeoff.achievable_load(topo, tol, K)  # must not raise
+    assert D * topo.total_workers == K * (tol.s_e + 1) * (tol.s_w + 1)
+
+
+def test_invalid_tolerance_raises():
+    topo = Topology.uniform(3, 3)
+    with pytest.raises(ValueError):
+        tradeoff.min_load_fraction(topo, Tolerance(3, 0))
+    with pytest.raises(ValueError):
+        tradeoff.min_load_fraction(topo, Tolerance(0, 3))
