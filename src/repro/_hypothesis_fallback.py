@@ -1,0 +1,213 @@
+"""Offline stand-in for the ``hypothesis`` property-testing API.
+
+The container has no network and no ``hypothesis`` wheel; six test
+modules would otherwise fail at *collection*.  This module implements
+the tiny subset they use — ``given`` / ``settings`` / ``strategies``
+(integers, sampled_from, booleans, lists, data) — by running each
+property on a fixed, seeded set of representative examples instead of
+adaptive search.  No shrinking, no database; determinism over power.
+
+Usage (at the top of a test module)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:                     # offline fallback
+        from repro._hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+# Cap per-test examples: real hypothesis asks for 12–60; the fallback's
+# fixed draws add no coverage past a dozen and CPU time is the budget.
+MAX_FALLBACK_EXAMPLES = 10
+_DEFAULT_EXAMPLES = 8
+_ATTR = "_fallback_max_examples"
+
+
+class SearchStrategy:
+    """Base strategy: a deterministic sampler over a value domain."""
+
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    # hypothesis API niceties some suites use
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        for _ in range(1000):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 examples")
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int = 0, max_value: Optional[int] = None):
+        self.lo = int(min_value)
+        self.hi = int(max_value) if max_value is not None else self.lo + 100
+
+    def example(self, rng):
+        # bias toward the boundaries — where real hypothesis finds bugs
+        r = rng.random()
+        if r < 0.25:
+            return self.lo
+        if r < 0.4:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from needs a non-empty sequence")
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0,
+                 max_size: Optional[int] = None, unique: bool = False):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 5
+        self.unique = unique
+
+    def example(self, rng):
+        size = rng.randint(self.min_size, max(self.min_size, self.max_size))
+        out: List[Any] = []
+        tries = 0
+        while len(out) < size and tries < 200:
+            v = self.elements.example(rng)
+            tries += 1
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+class _DataStrategy(SearchStrategy):
+    """Marker for ``st.data()``; materialized per-example as _DataObject."""
+
+    def example(self, rng):
+        return _DataObject(rng)
+
+
+class _DataObject:
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str = "") -> Any:
+        return strategy.example(self._rng)
+
+
+class strategies:  # noqa: N801 — mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value: int = 0, max_value: Optional[int] = None):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def lists(elements, *, min_size: int = 0, max_size: Optional[int] = None,
+              unique: bool = False):
+        return _Lists(elements, min_size, max_size, unique)
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    """Decorator recording the example budget on the wrapped test."""
+
+    def deco(fn):
+        setattr(fn, _ATTR, min(int(max_examples), MAX_FALLBACK_EXAMPLES))
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test on a fixed seeded batch of drawn examples.
+
+    Draws are deterministic (seeded by the test name), so failures
+    reproduce; each example re-seeds so one bad draw doesn't mask the
+    rest of the batch.
+    """
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        pos_map = dict(zip(names, arg_strategies))
+        pos_map.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(
+                wrapper, _ATTR,
+                getattr(fn, _ATTR, _DEFAULT_EXAMPLES),
+            )
+            base_seed = zlib.crc32(fn.__qualname__.encode()) & 0x7FFFFFFF
+            for i in range(n):
+                rng = random.Random(base_seed + i)
+                drawn = {k: s.example(rng) for k, s in pos_map.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # annotate the failing example
+                    shown = {
+                        k: v for k, v in drawn.items()
+                        if not isinstance(v, _DataObject)
+                    }
+                    raise AssertionError(
+                        f"falsifying example (fallback #{i}): {shown}"
+                    ) from e
+            return None
+
+        # preserve a settings() applied above the given() decorator
+        if hasattr(fn, _ATTR):
+            setattr(wrapper, _ATTR, getattr(fn, _ATTR))
+        # hide the drawn parameters from pytest's fixture resolution
+        # (hypothesis does the same): only pass-through params remain.
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in pos_map]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,37 @@
+"""``repro.dist`` — the JAX execution layer of the HGC reproduction.
+
+Bridges the numpy code-construction world (``repro.core``) to sharded
+JAX execution (``repro.launch`` / ``repro.models``):
+
+  * :mod:`repro.dist.sharding`    — PartitionSpec rules + activation anchors,
+  * :mod:`repro.dist.mesh`        — host-device test meshes (pod/data/model),
+  * :mod:`repro.dist.grad_sync`   — the two-stage coded aggregation
+    (paper eqs. 25/27) as shard_map collectives over the pod/data axes,
+  * :mod:`repro.dist.compression` — blockwise int8 for the bandwidth-
+    limited edge→master hop (+ error feedback),
+  * :mod:`repro.dist.elastic`     — straggler detection and mid-run
+    tolerance/topology replanning (JNCSS, Algorithm 2).
+
+Layering: core → kernels → dist → launch/models → examples.  Submodules
+import lazily at their own use sites; importing ``repro.dist`` itself
+never touches jax device state.
+"""
+from repro.dist import compression, elastic  # numpy/jnp-light modules
+
+__all__ = [
+    "compression",
+    "elastic",
+    "grad_sync",
+    "mesh",
+    "sharding",
+]
+
+
+def __getattr__(name):
+    # sharding/mesh/grad_sync pull in jax.sharding machinery — load on
+    # first attribute access so `import repro.dist` stays cheap.
+    if name in ("sharding", "mesh", "grad_sync"):
+        import importlib
+
+        return importlib.import_module(f"repro.dist.{name}")
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

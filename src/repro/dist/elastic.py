@@ -1,0 +1,174 @@
+"""Elastic tolerance/topology replanning + straggler detection.
+
+Mid-run adaptation in three moves (consumed by ``launch.train``):
+
+  * :class:`StragglerDetector` — EWMA of observed per-worker iteration
+    totals (eq. 31 samples); persistent drift is folded back into the
+    cluster model's deterministic compute term ``c``,
+  * :func:`replan` — re-run JNCSS (Algorithm 2) on the updated model and
+    rebuild the HGC code for the chosen tolerance.  A tolerance change
+    costs one host-side code rebuild; the compiled train step is reused
+    because λ enters as data (see :mod:`repro.dist.grad_sync`),
+  * :func:`shrink_topology` — drop PERMANENTLY failed edges/workers from
+    the cluster description (transient stragglers need no action: the
+    code tolerates them by construction).
+
+The heterogeneity-aware replanning direction follows Wang et al.
+(arXiv:1901.09339); HGC's two-layer structure makes it a pure
+(s_e, s_w) grid search (paper Theorem 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import jncss as jncss_mod
+from repro.core import tradeoff
+from repro.core.hgc import HGCCode
+from repro.core.runtime_model import ClusterParams, kth_min
+from repro.core.topology import Tolerance, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A replanning outcome: the new code + the JNCSS diagnostics."""
+
+    code: HGCCode
+    tol: Tolerance
+    K: int
+    expected_iteration_ms: float
+    jncss: jncss_mod.JNCSSResult
+
+    @property
+    def load(self) -> int:
+        return self.code.load
+
+
+def replan(
+    params: ClusterParams,
+    K: int,
+    seed: int = 0,
+    construction: str = "random",
+) -> Plan:
+    """JNCSS-plan a tolerance for this cluster and build its HGC code.
+
+    ``K`` is a target part count; it is bumped to the nearest
+    construction-compatible value for the chosen (s_e, s_w) (divisibility
+    of eqs. 15/18), so the returned ``plan.K`` may exceed the request.
+    """
+    res = jncss_mod.solve(params, K)
+    tol = Tolerance(res.s_e, res.s_w)
+    K_c = tradeoff.compatible_K(params.topo, tol, at_least=K)
+    code = HGCCode.build(
+        params.topo, tol, K=K_c, seed=seed, construction=construction
+    )
+    # res.T_tol was evaluated at the REQUESTED K's load; re-price the
+    # order-statistic expression at the load the built code actually
+    # carries (K_c ≥ K bumps D proportionally).
+    scores, _ = jncss_mod._edge_scores(params, float(code.load), tol.s_w)
+    T_deployed = float(kth_min(scores, params.topo.n - tol.s_e))
+    return Plan(
+        code=code,
+        tol=tol,
+        K=K_c,
+        expected_iteration_ms=T_deployed,
+        jncss=res,
+    )
+
+
+def shrink_topology(
+    params: ClusterParams,
+    dead_edges: Iterable[int] = (),
+    dead_workers: Iterable[Tuple[int, int]] = (),
+) -> ClusterParams:
+    """Cluster model with permanently failed nodes removed.
+
+    ``dead_workers`` are (edge, worker) pairs in the ORIGINAL indexing;
+    workers under a dead edge are removed implicitly.  Model/optimizer
+    state is topology-independent, so training resumes from the last
+    checkpoint against the shrunk cluster.
+    """
+    dead_e = set(dead_edges)
+    dead_w = set(tuple(p) for p in dead_workers)
+    topo = params.topo
+    keep_edges = [i for i in range(topo.n) if i not in dead_e]
+    if not keep_edges:
+        raise ValueError("all edges dead — nothing to shrink to")
+    new_m = []
+    keep_flat = []
+    for i in keep_edges:
+        kept = [j for j in range(topo.m[i]) if (i, j) not in dead_w]
+        if not kept:
+            raise ValueError(f"edge {i} has no surviving workers")
+        new_m.append(len(kept))
+        keep_flat.extend(topo.flat_index(i, j) for j in kept)
+    idx = np.asarray(keep_flat, np.intp)
+    eidx = np.asarray(keep_edges, np.intp)
+    return ClusterParams(
+        topo=Topology(m=tuple(new_m)),
+        c=params.c[idx],
+        gamma=params.gamma[idx],
+        tau_w=params.tau_w[idx],
+        p_w=params.p_w[idx],
+        tau_e=params.tau_e[eidx],
+        p_e=params.p_e[eidx],
+        master_contention=params.master_contention,
+    )
+
+
+class StragglerDetector:
+    """EWMA tracker of observed worker totals vs the cluster model.
+
+    ``observe`` feeds one iteration's flat worker totals (eq. 31
+    samples, as produced by ``ClusterParams.sample_iteration``);
+    ``updated_params`` folds any persistent positive drift into the
+    deterministic compute term ``c`` so the next JNCSS pass plans
+    around nodes that *got* slow, not just nodes that *were* slow.
+    """
+
+    def __init__(self, params: ClusterParams, alpha: float = 0.3):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.params = params
+        self.alpha = float(alpha)
+        self.ewma: Optional[np.ndarray] = None
+        self.n_obs = 0
+
+    def observe(self, worker_total: Sequence[float]) -> None:
+        wt = np.asarray(worker_total, np.float64)
+        if wt.shape != (self.params.topo.total_workers,):
+            raise ValueError(
+                f"expected ({self.params.topo.total_workers},) totals, "
+                f"got {wt.shape}"
+            )
+        if self.ewma is None:
+            self.ewma = wt.copy()
+        else:
+            self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * wt
+        self.n_obs += 1
+
+    def drift(self, D_ref: float) -> np.ndarray:
+        """Observed-minus-expected per-worker total (0 before data)."""
+        if self.ewma is None:
+            return np.zeros(self.params.topo.total_workers)
+        return self.ewma - self.params.expected_worker_total(D_ref)
+
+    def persistent_stragglers(
+        self, D_ref: float, factor: float = 2.0
+    ) -> np.ndarray:
+        """Flat indices whose EWMA exceeds ``factor ×`` the model mean."""
+        if self.ewma is None:
+            return np.empty(0, np.intp)
+        base = self.params.expected_worker_total(D_ref)
+        return np.flatnonzero(self.ewma > factor * base)
+
+    def updated_params(self, D_ref: float) -> ClusterParams:
+        """Cluster model with positive drift folded into ``c``.
+
+        Only slowdowns are applied (speedups are usually measurement
+        luck); drift divides by ``D_ref`` because ``c`` is per-part.
+        """
+        extra = np.maximum(self.drift(D_ref), 0.0) / max(D_ref, 1e-12)
+        return dataclasses.replace(self.params, c=self.params.c + extra)

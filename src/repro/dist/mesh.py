@@ -1,0 +1,24 @@
+"""Test meshes for host-device shard_map runs.
+
+The production meshes live in ``repro.launch.mesh`` (256/512 chips);
+this factory builds the small (pod × data × model) meshes used by the
+multi-device CPU tests (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+HGC mapping: "pod" = edge layer, "data" = worker layer within an edge,
+"model" = tensor-parallel shards of one worker group.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_test_mesh(pods: int, data: int, model: int):
+    """(pods × data × model) mesh with the canonical axis names."""
+    need = pods * data * model
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"mesh ({pods}×{data}×{model}) needs {need} devices, have "
+            f"{have}; set XLA_FLAGS=--xla_force_host_platform_device_count={need}"
+        )
+    return jax.make_mesh((pods, data, model), ("pod", "data", "model"))

@@ -1,0 +1,382 @@
+"""Sharding rules: PartitionSpec trees + activation anchors.
+
+One source of truth for how every tensor of the system is laid out on
+the (pod, data, model) production meshes of ``launch.mesh``:
+
+  * ``params_pspecs``    — Megatron-style 2-D sharding (TP over "model",
+    FSDP over "data") or pure data-parallel (``mode="dp_only"``),
+  * ``opt_state_pspecs`` — optimizer moments follow their parameters
+    (incl. adafactor's factored row/col accumulators),
+  * ``batch_pspecs`` / ``cache_pspecs`` — input and decode-cache layouts,
+  * ``fit_pspecs``       — clamps any rule to pjit's divisibility
+    requirement (a non-dividing axis entry is dropped, never errors),
+  * anchors (``anchor_activations`` …) — ``with_sharding_constraint``
+    hooks the model code calls unconditionally; they are no-ops unless a
+    surrounding :func:`activation_sharding` context is active.
+
+In the HGC mapping (DESIGN.md §3) "pod" is the edge layer and "data"
+the worker layer: parameters are never sharded across pods, so the only
+cross-pod traffic is the coded gradient exchange of
+:mod:`repro.dist.grad_sync`.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# mesh axis roles
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+_IS_SPEC = lambda x: isinstance(x, P)  # noqa: E731
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The batch-sharding axes present in this mesh (pod before data)."""
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.shape)
+
+
+# ----------------------------------------------------------------------
+# divisibility fitting
+# ----------------------------------------------------------------------
+def fit_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Clamp one spec to ``shape`` on ``mesh``.
+
+    Guarantees of the result: entry count == ndim, every named axis
+    exists in the mesh, is used at most once across the spec, and its
+    size product divides the corresponding dim.  Axes that violate any
+    of these are dropped (⇒ replicated on that dim) — never an error.
+    """
+    entries = list(tuple(spec))[: len(shape)]
+    entries += [None] * (len(shape) - len(entries))
+    used: set = set()
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        size = 1
+        for a in axes:
+            if a not in mesh.shape or a in used:
+                continue
+            if dim % (size * mesh.shape[a]) == 0:
+                keep.append(a)
+                size *= mesh.shape[a]
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def fit_pspecs(spec_tree: PyTree, abs_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Tree-wise :func:`fit_spec`; structures must match leaf-for-leaf."""
+    return jax.tree.map(
+        lambda a, s: fit_spec(s, a.shape, mesh),
+        abs_tree,
+        spec_tree,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def to_shardings(pspecs: PyTree, mesh: Mesh) -> PyTree:
+    """PartitionSpec tree → NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        pspecs,
+        is_leaf=lambda x: _IS_SPEC(x) or x is None,
+    )
+
+
+# ----------------------------------------------------------------------
+# parameter rules
+# ----------------------------------------------------------------------
+# column-parallel (shard the OUTPUT features over "model"): y = x @ W
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "wg", "wu", "w1", "w_gate", "w_lin", "w_a", "w_x",
+    "in_proj", "router",
+}
+# row-parallel (shard the INPUT features; output needs an all-reduce —
+# the anchors re-shard right after): y = x @ W with x model-sharded
+_ROW_PARALLEL = {"wo", "wd", "w2", "out_proj", "w_out"}
+# MoE expert-stacked weights (E, in, out): expert dim over the EP axis
+_EXPERT = {"we_g", "we_u", "we_d"}
+
+
+def _param_rule(
+    path_keys: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    *,
+    fsdp: bool,
+    tp: bool,
+    fsdp_axis,
+    tp_axis,
+    moe_ep_axis,
+) -> P:
+    """Full-rank spec for one parameter leaf (leading dims → None).
+
+    Only the trailing (functional) dims carry axes; stacked layer-group
+    leading dims stay replicated so ``lax.scan`` slices cheaply.
+    """
+    name = path_keys[-1] if path_keys else ""
+    nd = len(shape)
+    ent = [None] * nd
+
+    def set_at(i, ax):
+        if ax is not None and -nd <= i < nd:
+            ent[i % nd] = ax
+
+    if name in _EXPERT and nd >= 3:
+        set_at(-3, moe_ep_axis if tp else None)
+        if fsdp and moe_ep_axis != fsdp_axis:
+            set_at(-2, fsdp_axis)
+    elif name in _COL_PARALLEL and nd >= 2:
+        set_at(-1, tp_axis if tp else None)
+        if fsdp:
+            set_at(-2, fsdp_axis)
+    elif name in _ROW_PARALLEL and nd >= 2:
+        set_at(-2, tp_axis if tp else None)
+        if fsdp:
+            set_at(-1, fsdp_axis)
+    elif name == "table" and nd >= 2:
+        # embedding (V, d): d-sharded over model (all-gathered at the
+        # use site — see models.transformer._embed), vocab over FSDP
+        set_at(-1, tp_axis if tp else None)
+        if fsdp:
+            set_at(-2, fsdp_axis)
+    elif name == "w" and nd >= 2:
+        # unembed head (d, V): vocab-parallel logits
+        set_at(-1, tp_axis if tp else None)
+        if fsdp:
+            set_at(-2, fsdp_axis)
+    elif name == "conv_w" and nd >= 2:
+        set_at(-1, tp_axis if tp else None)
+    # 1-D vectors (norm scales, biases, A_log, D, dt_bias, lam, conv_b)
+    # stay replicated: tiny, and elementwise consumers resist resharding.
+    return P(*ent)
+
+
+def params_pspecs(
+    params: PyTree,
+    cfg,
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    mode: str = "2d",
+    moe_ep_axis: str = MODEL_AXIS,
+) -> PyTree:
+    """PartitionSpec tree for a parameter pytree.
+
+    ``mode="2d"``: TP over "model" + FSDP over "data" (never "pod" — in
+    the HGC mapping params are replicated per pod/edge).
+    ``mode="dp_only"``: no tensor parallelism; FSDP spreads over the
+    combined ("data", "model") axes instead so the whole mesh acts as
+    one data-parallel farm.
+    """
+    if mode not in ("2d", "dp_only"):
+        raise ValueError(f"unknown sharding mode {mode!r}")
+    tp = mode == "2d"
+    if tp:
+        fsdp_axis: Any = DATA_AXIS
+        tp_axis: Any = MODEL_AXIS
+    else:
+        fsdp_axis = tuple(
+            a for a in (DATA_AXIS, MODEL_AXIS) if a in mesh.shape
+        )
+        tp_axis = None
+    ep = moe_ep_axis if moe_ep_axis in mesh.shape else MODEL_AXIS
+
+    def rule(path, leaf):
+        keys = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in path
+        )
+        return _param_rule(
+            keys, tuple(leaf.shape), fsdp=fsdp, tp=tp,
+            fsdp_axis=fsdp_axis, tp_axis=tp_axis, moe_ep_axis=ep,
+        )
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_state_pspecs(opt_state: PyTree, pspecs: PyTree) -> PyTree:
+    """Optimizer-state specs derived from the parameter specs.
+
+    Moments with a parameter's exact shape inherit its spec; adafactor's
+    factored accumulators (``vr`` drops the last dim, ``vc`` the
+    second-to-last) inherit the surviving entries; scalars replicate.
+    """
+    flat = {}
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        pspecs, is_leaf=_IS_SPEC
+    )[0]:
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        flat[keys] = spec
+
+    def lookup(keys: Tuple[str, ...]) -> Optional[Tuple[P, str]]:
+        """Match an opt-state path onto a param path.
+
+        Opt trees wrap the params tree under a container key ("m", "v",
+        "acc") and adafactor adds a trailing "vr"/"vc"/"v" selector.
+        """
+        trail = ""
+        if keys and keys[-1] in ("vr", "vc") or (
+            len(keys) > 1 and keys[-1] == "v" and keys[:-1] not in flat
+        ):
+            trail = keys[-1]
+            keys = keys[:-1]
+        for strip in (1, 0):
+            cand = keys[strip:]
+            if cand in flat:
+                return flat[cand], trail
+        return None
+
+    def rule(path, leaf):
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        hit = lookup(keys)
+        if hit is None:
+            return P(*([None] * leaf.ndim))
+        spec, trail = hit
+        ent = list(tuple(spec))
+        if trail == "vr":  # param shape minus last dim
+            ent = ent[:-1]
+        elif trail == "vc":  # param shape minus second-to-last dim
+            ent = ent[:-2] + ent[-1:]
+        ent = (ent + [None] * leaf.ndim)[: leaf.ndim]
+        # dropping a dim can orphan a duplicate-free guarantee; re-check
+        seen: set = set()
+        clean = []
+        for e in ent:
+            axes = e if isinstance(e, tuple) else (e,)
+            if e is not None and any(a in seen for a in axes):
+                clean.append(None)
+                continue
+            seen.update(a for a in axes if a is not None)
+            clean.append(e)
+        return P(*clean)
+
+    return jax.tree_util.tree_map_with_path(rule, opt_state)
+
+
+# ----------------------------------------------------------------------
+# batch / cache rules
+# ----------------------------------------------------------------------
+def batch_pspecs(cfg, mesh: Mesh) -> Dict[str, P]:
+    """Input layouts: batch dim over (pod, data), features replicated."""
+    dp = dp_axes(mesh)
+    specs = {
+        "tokens": P(dp, None),
+        "targets": P(dp, None),
+        "weights": P(dp, None),
+        "denom": P(),
+        "token": P(dp, None),
+    }
+    # M-RoPE positions (3, B, S): batch is axis 1
+    specs["positions"] = P(None, dp, None)
+    if getattr(cfg, "is_encdec", False):
+        specs["enc_frames"] = P(dp, None, None)
+    if getattr(cfg, "mrope_sections", ()):
+        specs["visual_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_pspecs(cache: PyTree, mesh: Mesh) -> PyTree:
+    """Decode-cache layouts: batch over (pod, data), fused heads over
+    "model".  Leaves under "groups" carry a stacked layer-group leading
+    dim (scan) — their batch dim is axis 1, not 0."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        keys = tuple(k.key if hasattr(k, "key") else str(k) for k in path)
+        nd = leaf.ndim
+        if nd == 0 or "length" in keys:
+            return P()
+        stacked = "groups" in keys
+        batch_dim = 1 if stacked and nd >= 2 else 0
+        ent: list = [None] * nd
+        ent[batch_dim] = dp
+        # shard the fused feature dim (Kv·Dh / conv channels / d_state)
+        if nd - batch_dim >= 3 and MODEL_AXIS in mesh.shape:
+            ent[nd - 1] = MODEL_AXIS
+        return P(*ent)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+# ----------------------------------------------------------------------
+# activation anchors
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _ActCtx:
+    mesh: Mesh
+    dp: Tuple[str, ...]
+    tp: bool
+
+
+_ACT_CTX: Optional[_ActCtx] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, dp=None, tp: bool = True):
+    """Enable the activation anchors for code traced inside this block.
+
+    ``dp``: batch axes override (``dp_only`` passes ALL mesh axes so the
+    model axis carries extra batch shards); default (pod, data).
+    ``tp``: whether anchors pin the feature dim to "model".
+    """
+    global _ACT_CTX
+    prev = _ACT_CTX
+    axes = tuple(dp) if dp is not None else dp_axes(mesh)
+    _ACT_CTX = _ActCtx(mesh=mesh, dp=axes, tp=tp)
+    try:
+        yield
+    finally:
+        _ACT_CTX = prev
+
+
+def _constrain(x, spec: P):
+    ctx = _ACT_CTX
+    if ctx is None:
+        return x
+    spec = fit_spec(spec, x.shape, ctx.mesh)
+    return lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def anchor_activations(x):
+    """(B, S, d) block outputs: batch over dp, d over model."""
+    ctx = _ACT_CTX
+    if ctx is None:
+        return x
+    ent = [None] * x.ndim
+    if x.ndim >= 1:
+        ent[0] = ctx.dp
+    if ctx.tp and x.ndim >= 2:
+        ent[-1] = MODEL_AXIS
+    return _constrain(x, P(*ent))
+
+
+def anchor_embed(x):
+    """Post-embedding activations — same layout as block outputs."""
+    return anchor_activations(x)
+
+
+def anchor_logits(x):
+    """(…, V) logits: batch over dp, vocab over model (vocab-parallel)."""
+    return anchor_activations(x)
+
+
+def anchor_replicated(x):
+    """Force a full copy everywhere (the embed-table working copy)."""
+    return _constrain(x, P(*([None] * x.ndim)))

@@ -184,6 +184,8 @@ def run_cell(
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # newer jax: one per device
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             pod_stride = 256 if multi_pod else 10**9
             ana = hlo_analysis.analysis_record(hlo, pod_stride=pod_stride)

@@ -231,8 +231,16 @@ def main(argv=None):
                           seed=args.seed)
             if (plan.tol.s_e, plan.tol.s_w) != (code.tol.s_e, code.tol.s_w):
                 print(f"[train] replan: tolerance → (s_e={plan.tol.s_e}, "
-                      f"s_w={plan.tol.s_w})")
+                      f"s_w={plan.tol.s_w}), K={plan.K}, "
+                      f"T̂={plan.expected_iteration_ms:.0f} ms")
                 code = plan.code
+                # the compatible K for the new tolerance may exceed the
+                # old one — add resumable streams for the new parts
+                while len(streams) < code.K:
+                    streams.append(
+                        TokenStream(cfg.vocab, args.part_batch, args.seq_len,
+                                    seed=args.seed * 1000 + len(streams))
+                    )
     wall = time.time() - t0
     print(f"[train] done: {args.steps - start} steps in {wall:.1f}s wall, "
           f"{sim_ms/1e3:.1f}s simulated cluster time")

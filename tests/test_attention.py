@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: fixed-example fallback
+    from repro._hypothesis_fallback import (
+        given, settings, strategies as st,
+    )
 
 from repro.models import attention as A
 

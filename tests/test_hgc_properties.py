@@ -5,7 +5,12 @@ System invariant under test: for ANY straggler pattern within the
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: fixed-example fallback
+    from repro._hypothesis_fallback import (
+        given, settings, strategies as st,
+    )
 
 from repro.core import tradeoff
 from repro.core.hgc import HGCCode
