@@ -1,0 +1,54 @@
+"""CI regression gate: compare a benchmark JSON against its baseline.
+
+    python -m benchmarks.check_regression CURRENT BASELINE [--tol 0.25]
+
+Exits 1 when any timed metric is more than ``tol`` slower than the
+committed baseline.  Speedups never fail; refresh the baseline by
+copying a representative CI run's artifact over
+``benchmarks/baselines/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TIMED_KEYS = ("us_per_step", "us_per_call")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed slowdown fraction (0.25 = +25%%)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    name = cur.get("name", args.current)
+    regressed = []
+    compared = 0
+    for key in TIMED_KEYS:
+        if key not in cur or key not in base:
+            continue
+        compared += 1
+        ratio = cur[key] / base[key]
+        print(f"{name}.{key}: current {cur[key]:.1f} vs baseline "
+              f"{base[key]:.1f}  ({ratio:.2f}x)")
+        if ratio > 1.0 + args.tol:
+            regressed.append(key)
+    if compared == 0:
+        # a renamed probe key / malformed baseline must not ship green
+        print(f"ERROR: no timed keys {TIMED_KEYS} shared by "
+              f"{args.current} and {args.baseline}")
+        sys.exit(1)
+    if regressed:
+        print(f"REGRESSION: {regressed} exceed the {args.tol:.0%} budget")
+        sys.exit(1)
+    print("OK: within budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,16 @@
 
 ``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV.
 Set BENCH_FAST=1 for the reduced-iteration variant.
+
+``--quick`` (the CI bench-smoke job) runs the fast subset with
+BENCH_FAST=1 and writes the train-step probe as JSON (``--out``,
+default BENCH_trainstep.json) for the regression gate
+(``benchmarks.check_regression``).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 import traceback
@@ -19,13 +26,32 @@ MODULES = [
     "benchmarks.bench_extensions",        # Cor. 2 multilayer + partial
     "benchmarks.bench_table1_time_to_acc",  # Table I
     "benchmarks.bench_fig56_accuracy",    # Figs. 5 & 6
+    "benchmarks.bench_trainstep",         # CI regression probe
+]
+
+QUICK_MODULES = [
+    "benchmarks.bench_tradeoff",
+    "benchmarks.bench_jncss",
+    "benchmarks.bench_trainstep",
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fast subset with BENCH_FAST=1 (CI bench-smoke)")
+    ap.add_argument("--out", default="BENCH_trainstep.json",
+                    help="train-step JSON path (with --quick)")
+    args = ap.parse_args(argv)
+    modules = MODULES
+    if args.quick:
+        # set BEFORE the benchmark modules import benchmarks.common
+        os.environ["BENCH_FAST"] = "1"
+        os.environ["BENCH_TRAINSTEP_OUT"] = args.out
+        modules = QUICK_MODULES
     print("name,us_per_call,derived")
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         t0 = time.time()
         try:
             mod = __import__(mod_name, fromlist=["main"])

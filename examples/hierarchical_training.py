@@ -18,6 +18,11 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--checkpoint-dir", default="/tmp/repro_hgc_ckpt")
+    ap.add_argument("--dist", default="off",
+                    choices=["off", "coded", "coded_int8"],
+                    help="run the mesh-aware coded-collective loop "
+                         "(needs n_edges × n_workers devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
     argv = [
@@ -26,6 +31,7 @@ if __name__ == "__main__":
         "--scheme", "hgc_jncss",
         "--n-edges", "2", "--n-workers", "4",
         "--seq-len", "64",
+        "--dist", args.dist,
         "--checkpoint-dir", args.checkpoint_dir,
         "--checkpoint-every", "50",
         "--replan-every", "100",

@@ -98,18 +98,36 @@ class CheckpointStore:
     # ------------------------------------------------------------------
     def save(self, step: int, state: PyTree,
              extra: Optional[Dict] = None) -> str:
-        """Atomic save of a full training state pytree."""
+        """Atomic save of a full training state pytree.
+
+        ``extra`` keys that are JSON-serializable land in meta.json;
+        array-valued entries (pytrees of ndarrays — detector EWMA
+        buffers, error-feedback residuals, …) are flattened into a
+        sibling ``extra.npz`` and merged back on :meth:`restore`.
+        """
         state = jax.tree.map(np.asarray, state)
         flat = _flatten(state)
+        json_extra: Dict = {}
+        arr_extra: Dict = {}
+        for k, v in (extra or {}).items():
+            try:
+                json.dumps(v)
+                json_extra[k] = v
+            except TypeError:
+                arr_extra[k] = jax.tree.map(np.asarray, v)
         tmp_dir = os.path.join(self.dir, f"tmp.{step}.{os.getpid()}")
         os.makedirs(tmp_dir, exist_ok=True)
         path = os.path.join(tmp_dir, "state.npz")
         np.savez(path, **flat)
+        if arr_extra:
+            np.savez(
+                os.path.join(tmp_dir, "extra.npz"), **_flatten(arr_extra)
+            )
         meta = {
             "step": step,
             "time": time.time(),
             "cfg_hash": self.cfg_hash,
-            "extra": extra or {},
+            "extra": json_extra,
             "n_arrays": len(flat),
             "bytes": int(sum(v.nbytes for v in flat.values())),
         }
@@ -162,4 +180,9 @@ class CheckpointStore:
             )
         with np.load(os.path.join(d, "state.npz")) as z:
             flat = {k: z[k] for k in z.files}
-        return step, _unflatten(flat), meta.get("extra", {})
+        extra = dict(meta.get("extra", {}))
+        extra_path = os.path.join(d, "extra.npz")
+        if os.path.exists(extra_path):
+            with np.load(extra_path) as z:
+                extra.update(_unflatten({k: z[k] for k in z.files}))
+        return step, _unflatten(flat), extra

@@ -200,6 +200,12 @@ class TrainConfig:
     keep_checkpoints: int = 3
     # distributed perf knobs (see EXPERIMENTS.md §Perf)
     remat_policy: str = "layer"  # layer | none | dots
-    grad_compression: str = "none"  # none | int8
+    # aggregation execution mode (launch.train --dist):
+    #   off        — single-host reference loop, λ rides the batch weights
+    #   coded      — shard_map two-stage coded psum on a (pod, data[, model]) mesh
+    #   coded_int8 — same, with the int8 + error-feedback cross-pod hop
+    dist_mode: str = "off"
+    grad_compression: str = "none"  # none | int8 (edge→master hop)
+    grad_compression_block: int = 64  # int8 block size on that hop
     fsdp: bool = True  # shard params over the data axis as well
     seq_shard_activations: bool = False  # SP: shard saved acts over model

@@ -1,0 +1,33 @@
+"""JAX version compatibility shims for ``repro.dist``.
+
+``shard_map`` graduated out of ``jax.experimental`` (``jax.shard_map``
+from 0.5/0.6 onward) and its replication-check kwarg was renamed
+``check_rep`` → ``check_vma``.  Every shard_map use in this repo goes
+through :func:`shard_map` below so both the pinned ``jax<0.5`` CI leg
+and the latest-``jax[cpu]`` leg run the same source.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5.x
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # the pinned 0.4.x toolchain
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
+    """``shard_map`` with the 0.4.x calling convention on any jax."""
+    kw = {}
+    if "check_rep" in _PARAMS:
+        kw["check_rep"] = check_rep
+    elif "check_vma" in _PARAMS:
+        kw["check_vma"] = check_rep
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )
+
+
+__all__ = ["shard_map"]

@@ -89,6 +89,18 @@ def dequantize_tree(qtree: PyTree) -> PyTree:
     )
 
 
+def init_pod_residuals(tree: PyTree, n_pods: int) -> PyTree:
+    """Zero EF residuals for the sharded train step, one row per pod.
+
+    Leaves are ``(n_pods, *leaf.shape)`` f32 — sharded ``P("pod")`` they
+    hand each pod its own residual inside the shard_map region (see
+    :func:`repro.dist.grad_sync.compressed_coded_psum`).
+    """
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_pods,) + tuple(x.shape), jnp.float32), tree
+    )
+
+
 def compress_error_feedback(
     tree: PyTree, residual: PyTree, block: int = DEFAULT_BLOCK
 ) -> Tuple[PyTree, PyTree]:

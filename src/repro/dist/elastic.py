@@ -51,19 +51,33 @@ def replan(
     K: int,
     seed: int = 0,
     construction: str = "random",
+    reuse: Optional[HGCCode] = None,
 ) -> Plan:
     """JNCSS-plan a tolerance for this cluster and build its HGC code.
 
     ``K`` is a target part count; it is bumped to the nearest
     construction-compatible value for the chosen (s_e, s_w) (divisibility
     of eqs. 15/18), so the returned ``plan.K`` may exceed the request.
+
+    ``reuse``: the currently deployed code — when JNCSS lands on the
+    same (tolerance, K, topology) the deployed code is returned as-is
+    instead of being rebuilt, so part assignments (and therefore the
+    caller's per-part data streams) stay valid with zero churn.
     """
     res = jncss_mod.solve(params, K)
     tol = Tolerance(res.s_e, res.s_w)
     K_c = tradeoff.compatible_K(params.topo, tol, at_least=K)
-    code = HGCCode.build(
-        params.topo, tol, K=K_c, seed=seed, construction=construction
-    )
+    if (
+        reuse is not None
+        and reuse.tol == tol
+        and reuse.K == K_c
+        and reuse.topo == params.topo
+    ):
+        code = reuse
+    else:
+        code = HGCCode.build(
+            params.topo, tol, K=K_c, seed=seed, construction=construction
+        )
     # res.T_tol was evaluated at the REQUESTED K's load; re-price the
     # order-statistic expression at the load the built code actually
     # carries (K_c ≥ K bumps D proportionally).
@@ -163,6 +177,27 @@ class StragglerDetector:
             return np.empty(0, np.intp)
         base = self.params.expected_worker_total(D_ref)
         return np.flatnonzero(self.ewma > factor * base)
+
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot (checkpoint ``extra`` payload).
+
+        A restored run replans from *observed* delays instead of priors;
+        floats survive the JSON round trip exactly (repr round-trip), so
+        kill/resume replans bit-for-bit.
+        """
+        return {
+            "alpha": self.alpha,
+            "n_obs": self.n_obs,
+            "ewma": None if self.ewma is None else self.ewma.tolist(),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.alpha = float(d["alpha"])
+        self.n_obs = int(d["n_obs"])
+        ewma = d.get("ewma")
+        self.ewma = (
+            None if ewma is None else np.asarray(ewma, np.float64).copy()
+        )
 
     def updated_params(self, D_ref: float) -> ClusterParams:
         """Cluster model with positive drift folded into ``c``.

@@ -25,8 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.dist._compat import shard_map
 
 from repro.dist import compression
 from repro.kernels import ops as kernel_ops
@@ -87,6 +88,65 @@ def coded_weighted_psum(
         return y
 
     return jax.tree.map(one, tree)
+
+
+def compressed_coded_psum(
+    tree: PyTree,
+    lam,
+    residual: PyTree,
+    *,
+    n_pods: int,
+    axes: Tuple[str, str] = (EDGE_AXIS, WORKER_AXIS),
+    block: int = 64,
+    use_pallas=None,
+) -> Tuple[PyTree, PyTree]:
+    """λ-weighted decode with an int8 + error-feedback cross-pod hop.
+
+    In-shard_map counterpart of :func:`coded_weighted_psum` for the
+    bandwidth-limited regime: stage 1 (worker→edge, eq. 25) stays an
+    exact psum; the per-edge partial plus this pod's EF residual is then
+    blockwise-int8 quantized, all-gathered across the pod axis and
+    combined through the fused dequant kernel (eq. 27 over int8
+    payloads).  ``residual`` leaves carry a leading per-pod axis (local
+    block size 1 inside shard_map); the returned residual is what the
+    int8 payload failed to carry, so transmitted values telescope
+    (EF-SGD — time-averaged gradient stays unbiased).
+
+    Returns ``(decoded_tree, new_residual)``.
+    """
+    pod_axis, worker_axis = axes
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    lam = jnp.asarray(lam)
+
+    def leaf(x, r):
+        y = x * lam.astype(jnp.float32)
+        y = lax.psum(y, worker_axis)  # exact edge decode (eq. 25)
+        target = y + r.reshape(y.shape).astype(jnp.float32)
+        q, scales, meta = compression.quantize_int8(target, block=block)
+        # local dequant: the EF update needs what the wire will carry
+        sent = compression.dequantize_int8(q, scales, meta)
+        new_r = (target - sent).reshape(r.shape).astype(r.dtype)
+        qs = lax.all_gather(q, pod_axis)       # (n_pods, F_padded)
+        ss = lax.all_gather(scales, pod_axis)  # (n_pods, nb)
+        ones = jnp.ones((1, n_pods), jnp.float32)
+        out = kernel_ops.combine_q(
+            ones, qs, ss, block=block, use_pallas=use_pallas
+        )[0]
+        return out[: y.size].reshape(y.shape).astype(x.dtype), new_r
+
+    flat_x, treedef = jax.tree.flatten(tree)
+    flat_r = jax.tree.leaves(residual)
+    if len(flat_x) != len(flat_r):
+        raise ValueError(
+            f"residual has {len(flat_r)} leaves, gradients {len(flat_x)}"
+        )
+    outs = [leaf(x, r) for x, r in zip(flat_x, flat_r)]
+    decoded = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_residual = jax.tree.unflatten(
+        jax.tree.structure(residual), [o[1] for o in outs]
+    )
+    return decoded, new_residual
 
 
 # ----------------------------------------------------------------------

@@ -270,6 +270,27 @@ def opt_state_pspecs(opt_state: PyTree, pspecs: PyTree) -> PyTree:
     return jax.tree_util.tree_map_with_path(rule, opt_state)
 
 
+def state_shardings(
+    params: PyTree,
+    opt_state: PyTree,
+    cfg,
+    mesh: Mesh,
+    *,
+    mode: str = "2d",
+    fsdp: bool = True,
+) -> Tuple[PyTree, PyTree]:
+    """Fitted NamedSharding trees for ``(params, opt_state)`` on ``mesh``.
+
+    The one-call path the train driver uses: parameter rules →
+    divisibility fit → optimizer-state inheritance → NamedShardings.
+    """
+    pspecs = fit_pspecs(
+        params_pspecs(params, cfg, mesh, fsdp=fsdp, mode=mode), params, mesh
+    )
+    ospecs = fit_pspecs(opt_state_pspecs(opt_state, pspecs), opt_state, mesh)
+    return to_shardings(pspecs, mesh), to_shardings(ospecs, mesh)
+
+
 # ----------------------------------------------------------------------
 # batch / cache rules
 # ----------------------------------------------------------------------

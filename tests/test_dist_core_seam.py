@@ -82,10 +82,10 @@ _SCRIPT = textwrap.dedent(
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
     import numpy as np
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.core.hgc import HGCCode
     from repro.core.topology import Tolerance, Topology
+    from repro.dist._compat import shard_map
     from repro.dist.grad_sync import coded_weighted_psum, lam_array_from_code
     from repro.dist.mesh import make_test_mesh
 

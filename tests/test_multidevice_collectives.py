@@ -48,7 +48,7 @@ _SCRIPT = textwrap.dedent(
     # feed each group its own message by sharding a (pods, data, dim)
     # array and reducing with the coded weights.
     from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+    from repro.dist._compat import shard_map
     from repro.dist.grad_sync import coded_weighted_psum
 
     def inner(msg_block, lam_block):
