@@ -1,0 +1,92 @@
+"""dp_only sharding study: FSDP over ("data","model") vs pure replication.
+
+ROADMAP open item: ``mode="dp_only"`` shards FSDP over the combined
+("data", "model") axes while the batch anchors span all axes — is that
+actually better than replicating the parameters outright?  This bench
+answers with the dryrun machinery on the 512-chip production mesh:
+lower + compile each variant and record XLA's memory analysis and the
+collective traffic.  The verdict is static (no timing), so the record
+is committed to ``benchmarks/baselines/BENCH_dp_only_fsdp.json`` as a
+reference artifact rather than gated in CI (the 512-device compile is
+too heavy for the bench-smoke job).
+
+    PYTHONPATH=src python -m benchmarks.bench_dp_only_fsdp \
+        [--arch mamba2-370m] [--out benchmarks/baselines/BENCH_dp_only_fsdp.json]
+
+The child re-execs with the forced 512-device flag so the parent's jax
+(if any) keeps its own device count.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+_CHILD_FLAG = "--child"
+
+
+def _child(arch: str, shape: str, microbatch: int) -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.launch.dryrun import run_cell
+
+    out = {}
+    for tag, fsdp in (("fsdp_data_model", True), ("replicated", False)):
+        rec = run_cell(
+            arch, shape, multi_pod=False, fsdp=fsdp,
+            microbatch=microbatch, mode="dp_only", verbose=False,
+        )
+        keep = {
+            k: rec.get(k)
+            for k in ("status", "error", "lower_s", "compile_s",
+                      "memory_analysis", "collective_operand_bytes",
+                      "collective_link_bytes", "bytes_accessed")
+        }
+        out[tag] = keep
+    print(json.dumps({
+        "name": "dp_only_fsdp_vs_replicated",
+        "arch": arch, "shape": shape, "mesh": "single-pod 16x16 (512 dev)",
+        "microbatch": microbatch,
+        "variants": out,
+    }))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--microbatch", type=int, default=32)
+    ap.add_argument("--out", default="")
+    ap.add_argument("--child", action="store_true")
+    args = ap.parse_args(argv)
+    if args.child:
+        _child(args.arch, args.shape, args.microbatch)
+        return
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_dp_only_fsdp",
+         "--arch", args.arch, "--shape", args.shape,
+         "--microbatch", str(args.microbatch), _CHILD_FLAG],
+        capture_output=True, text=True, env=env, timeout=3600,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"dp_only bench failed:\n{r.stderr[-3000:]}")
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    for tag, v in rec["variants"].items():
+        mem = v.get("memory_analysis") or {}
+        arg_gb = (mem.get("argument_bytes", 0) or 0) / 2**30
+        tmp_gb = (mem.get("temp_bytes", 0) or 0) / 2**30
+        print(f"{rec['name']}/{tag},0,"
+              f"args {arg_gb:.3f} GiB/dev; temps {tmp_gb:.3f} GiB/dev; "
+              f"coll {v.get('collective_link_bytes', 0):.3e} B")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Tensor-parallel train-step microbenchmark — the TP regression probe.
+
+Times one step of ``steps.make_dist_train_step`` (llama3-family smoke
+config) on the 8-device (pod=2, data=2, model=2) test mesh: real
+in-shard_map TP — column/row-parallel matmuls, vocab-parallel CE, the
+two-stage coded psum — end to end.  Because the device count must be
+forced before jax initializes (and the bench harness may already have
+initialized jax), the measurement always runs in a child process; the
+parent emits the standard CSV row and, when ``BENCH_TRAINSTEP_TP_OUT``
+is set (``benchmarks.run --quick``), the JSON record CI diffs against
+``benchmarks/baselines/BENCH_trainstep_tp.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD_FLAG = "--child"
+
+
+def _child() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import FAST, timeit
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.data.pipeline import TokenStream
+    from repro.dist.mesh import make_test_mesh
+    from repro.launch import steps as steps_lib
+    from repro.models import transformer as tf
+    from repro.optim import make_optimizer
+
+    cfg = get_smoke_config("llama3-8b")
+    tcfg = TrainConfig(
+        optimizer="adamw", lr=1e-2, total_steps=100, warmup_steps=10,
+        grad_clip=1.0,
+    )
+    optimizer = make_optimizer("adamw")
+    mesh = make_test_mesh(2, 2, 2)
+    step_fn = jax.jit(
+        steps_lib.make_dist_train_step(cfg, tcfg, mesh, optimizer=optimizer)
+    )
+    B, S = (8, 32) if FAST else (16, 64)
+    batch = {
+        k: jnp.asarray(v)
+        for k, v in TokenStream(cfg.vocab, B, S, seed=0).next_batch().items()
+    }
+    batch["denom"] = jnp.float32(B * S)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = optimizer.init(params)
+    lam = jnp.full((2, 2), 0.25, jnp.float32)
+
+    def run():
+        _, _, _, metrics = step_fn(
+            params, opt_state, batch, lam, {}, jnp.asarray(0)
+        )
+        jax.block_until_ready(metrics["loss"])
+
+    us = min(timeit(run, repeats=10 if FAST else 20) for _ in range(3))
+    print(json.dumps({
+        "name": "trainstep_tp_smoke",
+        "us_per_step": us,
+        "batch": B,
+        "seq_len": S,
+        "mesh": "pod=2,data=2,model=2",
+    }))
+
+
+def main() -> None:
+    if _CHILD_FLAG in sys.argv:
+        _child()
+        return
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_trainstep_tp", _CHILD_FLAG],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"TP train-step probe failed:\n{r.stderr[-2000:]}"
+        )
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    print(f"{rec['name']},{rec['us_per_step']:.1f},"
+          f"B{rec['batch']}xS{rec['seq_len']}@{rec['mesh']}")
+    out = os.environ.get("BENCH_TRAINSTEP_TP_OUT", "")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,12 +27,14 @@ MODULES = [
     "benchmarks.bench_table1_time_to_acc",  # Table I
     "benchmarks.bench_fig56_accuracy",    # Figs. 5 & 6
     "benchmarks.bench_trainstep",         # CI regression probe
+    "benchmarks.bench_trainstep_tp",      # CI regression probe (dist TP)
 ]
 
 QUICK_MODULES = [
     "benchmarks.bench_tradeoff",
     "benchmarks.bench_jncss",
     "benchmarks.bench_trainstep",
+    "benchmarks.bench_trainstep_tp",
 ]
 
 
@@ -48,6 +50,8 @@ def main(argv=None) -> None:
         # set BEFORE the benchmark modules import benchmarks.common
         os.environ["BENCH_FAST"] = "1"
         os.environ["BENCH_TRAINSTEP_OUT"] = args.out
+        root, ext = os.path.splitext(args.out)
+        os.environ["BENCH_TRAINSTEP_TP_OUT"] = f"{root}_tp{ext or '.json'}"
         modules = QUICK_MODULES
     print("name,us_per_call,derived")
     failures = 0

@@ -39,6 +39,172 @@ MODEL_AXIS = "model"
 _IS_SPEC = lambda x: isinstance(x, P)  # noqa: E731
 
 
+# ----------------------------------------------------------------------
+# ShardCtx — the execution seam between launch.steps and models/
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-axis context threaded through the model stack.
+
+    Two execution regimes share the model code:
+
+      * pjit path (dryrun / single-host): ctx is inactive — the model
+        emits plain ops plus activation anchors and GSPMD partitions
+        them from the pspec rules,
+      * dist path (``--dist`` train step): the forward/backward runs
+        INSIDE shard_map with params entering model-sharded per
+        :func:`params_pspecs`; ctx tells each layer how to finish its
+        row-parallel matmuls (psum over ``model_axis``), gather the
+        embedding slice, and slice replicated vectors to the local
+        feature block.
+
+    All sharded/replicated decisions the model code makes from ctx are
+    *static* (local-vs-global shape comparisons at trace time), so a
+    single compiled executable serves every runtime straggler pattern.
+    """
+
+    model_axis: str = MODEL_AXIS
+    data_axes: Tuple[str, ...] = (POD_AXIS, DATA_AXIS)
+    tp: int = 1
+    inside_shard_map: bool = False
+
+    @property
+    def active(self) -> bool:
+        return self.inside_shard_map and self.tp > 1
+
+    def psum(self, x):
+        """Finish a row-parallel matmul (partial sums → full value)."""
+        if not self.active:
+            return x
+        return lax.psum(x, self.model_axis)
+
+    def pmax(self, x):
+        if not self.active:
+            return x
+        return lax.pmax(x, self.model_axis)
+
+    def axis_index(self):
+        if not self.active:
+            return 0
+        return lax.axis_index(self.model_axis)
+
+    def all_gather(self, x, axis: int = -1):
+        """Concatenate the per-shard blocks along ``axis`` (tiled)."""
+        if not self.active:
+            return x
+        return lax.all_gather(
+            x, self.model_axis, axis=axis % x.ndim, tiled=True
+        )
+
+    def local_block(self, v, local: int, axis: int = -1):
+        """This shard's feature block of a replicated array.
+
+        No-op when ``v`` already has the local size on ``axis`` (the
+        consuming weight was not model-sharded) — a static decision.
+        """
+        if not self.active or v.shape[axis] == local:
+            return v
+        start = self.axis_index() * local
+        return lax.dynamic_slice_in_dim(v, start, local, axis=axis)
+
+
+#: inactive context — the pjit/decode paths and all default callers
+NULL_CTX = ShardCtx()
+
+
+def make_shard_ctx(mesh: Mesh) -> ShardCtx:
+    """ShardCtx for code running inside a shard_map region on ``mesh``."""
+    tp = int(mesh.shape.get(MODEL_AXIS, 1))
+    return ShardCtx(
+        model_axis=MODEL_AXIS,
+        data_axes=dp_axes(mesh),
+        tp=tp,
+        inside_shard_map=True,
+    )
+
+
+def model_axis_only(pspecs: PyTree) -> PyTree:
+    """Project a spec tree onto the model axis (drop pod/data entries).
+
+    These are the shard_map ``in_specs``/``out_specs`` of the dist-TP
+    train step: params enter model-sharded (XLA materializes any FSDP
+    gather at the region boundary) and replicated over pod/data.
+    """
+
+    def one(spec):
+        ent = []
+        for e in tuple(spec):
+            axes = e if isinstance(e, tuple) else (e,)
+            ent.append(MODEL_AXIS if MODEL_AXIS in axes else None)
+        return P(*ent)
+
+    return jax.tree.map(one, pspecs, is_leaf=_IS_SPEC)
+
+
+def model_sharded_mask(pspecs: PyTree) -> PyTree:
+    """True per leaf iff the spec shards it over the model axis.
+
+    The dist step's gradient correction keys off this: inside shard_map
+    each shard computes ``∂(Σ_shards φ_j)/∂(local copy)`` of its
+    replicated objective, so model-sharded leaves divide by tp and
+    replicated leaves psum over model then divide by tp.
+    """
+
+    def one(spec):
+        for e in tuple(spec):
+            axes = e if isinstance(e, tuple) else (e,)
+            if MODEL_AXIS in axes:
+                return True
+        return False
+
+    return jax.tree.map(one, pspecs, is_leaf=_IS_SPEC)
+
+
+def validate_tp(cfg, tp: int) -> None:
+    """Clear error (instead of a shape crash) for a bad ``--tp`` degree.
+
+    Checks the arch config's divisibility constraints for real
+    tensor-parallel execution.  KV heads are exempt: when ``n_kv_heads``
+    does not divide, K/V projections replicate (Megatron-style GQA
+    fallback) as long as the local Q heads still group evenly.
+    """
+    if tp <= 1:
+        return
+    errs = []
+    kinds = set(cfg.block_pattern)
+    if cfg.d_model % tp:
+        errs.append(f"d_model={cfg.d_model} not divisible by tp={tp}")
+    if kinds & {"global", "local"} or cfg.is_encdec:
+        if cfg.n_heads % tp:
+            errs.append(f"n_heads={cfg.n_heads} not divisible by tp={tp}")
+        elif cfg.n_kv_heads % tp and tp % cfg.n_kv_heads:
+            # replicated-KV fallback: each shard's Q block must sit
+            # inside ONE KV group (tp a multiple of n_kv_heads), else
+            # the per-shard Q→KV pairing cannot be made consistent
+            errs.append(
+                f"GQA: n_kv_heads={cfg.n_kv_heads} neither divides nor "
+                f"is divided by tp={tp} — KV heads can neither shard "
+                f"nor replicate consistently"
+            )
+    if cfg.d_ff > 0 and kinds != {"ssm"}:
+        ffd = cfg.d_ff_dense or cfg.d_ff
+        if ffd % tp:
+            errs.append(f"d_ff={ffd} not divisible by tp={tp}")
+    if "ssm" in kinds:
+        nh = (cfg.expand * cfg.d_model) // cfg.ssm_head_dim
+        if nh % tp:
+            errs.append(f"ssm heads={nh} not divisible by tp={tp}")
+    if "recurrent" in kinds:
+        r = cfg.lru_width or cfg.d_model
+        if r % tp:
+            errs.append(f"lru_width={r} not divisible by tp={tp}")
+    if errs:
+        raise ValueError(
+            f"{cfg.name}: tensor parallelism tp={tp} violates "
+            f"divisibility constraints: " + "; ".join(errs)
+        )
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     """The batch-sharding axes present in this mesh (pod before data)."""
     return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.shape)
@@ -106,14 +272,25 @@ def to_shardings(pspecs: PyTree, mesh: Mesh) -> PyTree:
 # ----------------------------------------------------------------------
 # column-parallel (shard the OUTPUT features over "model"): y = x @ W
 _COL_PARALLEL = {
-    "wq", "wk", "wv", "wg", "wu", "w1", "w_gate", "w_lin", "w_a", "w_x",
-    "in_proj", "router",
+    "wq", "wk", "wv", "wg", "wu", "w1", "w_gate", "w_lin",
+    "zproj", "xproj", "dtproj", "router", "ws_g", "ws_u",
 }
 # row-parallel (shard the INPUT features; output needs an all-reduce —
-# the anchors re-shard right after): y = x @ W with x model-sharded
-_ROW_PARALLEL = {"wo", "wd", "w2", "out_proj", "w_out"}
+# the anchors re-shard right after / ShardCtx.psum in the dist path):
+# y = x @ W with x model-sharded.  w_a/w_x (RG-LRU gates) are row-
+# parallel: they consume the model-sharded recurrence width and the
+# full pre-activations are restored by one psum, then re-sliced.
+_ROW_PARALLEL = {"wo", "wd", "w2", "out_proj", "w_out", "ws_d",
+                 "w_a", "w_x"}
 # MoE expert-stacked weights (E, in, out): expert dim over the EP axis
 _EXPERT = {"we_g", "we_u", "we_d"}
+# depthwise-conv weights (K, channels): channels follow the col-parallel
+# projection feeding them
+_CONV_CHANNEL = {"conv_w", "conv_x_w"}
+# head-granular weights: TP must not split a head (or KV group), so the
+# model axis is dropped unless the HEAD count divides tp — replicated
+# K/V is the Megatron GQA fallback, not an error
+_HEAD_OF = {"wq": "q", "wo": "q", "wk": "kv", "wv": "kv"}
 
 
 def _param_rule(
@@ -162,7 +339,7 @@ def _param_rule(
         set_at(-1, tp_axis if tp else None)
         if fsdp:
             set_at(-2, fsdp_axis)
-    elif name == "conv_w" and nd >= 2:
+    elif name in _CONV_CHANNEL and nd >= 2:
         set_at(-1, tp_axis if tp else None)
     # 1-D vectors (norm scales, biases, A_log, D, dt_bias, lam, conv_b)
     # stay replicated: tiny, and elementwise consumers resist resharding.
@@ -177,6 +354,7 @@ def params_pspecs(
     fsdp: bool = True,
     mode: str = "2d",
     moe_ep_axis: str = MODEL_AXIS,
+    head_aligned: bool = False,
 ) -> PyTree:
     """PartitionSpec tree for a parameter pytree.
 
@@ -185,6 +363,11 @@ def params_pspecs(
     ``mode="dp_only"``: no tensor parallelism; FSDP spreads over the
     combined ("data", "model") axes instead so the whole mesh acts as
     one data-parallel farm.
+    ``head_aligned``: only shard head-granular weights over "model" when
+    whole heads divide the TP degree.  The explicit in-shard_map TP
+    path REQUIRES this (a mid-head block cannot execute); the pjit path
+    must NOT use it — GSPMD handles mid-head storage blocks fine, and
+    dropping them there would replicate large weights for no reason.
     """
     if mode not in ("2d", "dp_only"):
         raise ValueError(f"unknown sharding mode {mode!r}")
@@ -198,14 +381,34 @@ def params_pspecs(
         )
         tp_axis = None
     ep = moe_ep_axis if moe_ep_axis in mesh.shape else MODEL_AXIS
+    tp_size = int(mesh.shape.get(MODEL_AXIS, 1))
+    ssm_heads = (
+        (cfg.expand * cfg.d_model) // cfg.ssm_head_dim
+        if getattr(cfg, "ssm_head_dim", 0) else 0
+    )
+
+    def head_ok(name: str) -> bool:
+        """TP may only shard whole heads (attention) / SSM head blocks."""
+        if not head_aligned or tp_size <= 1:
+            return True
+        if name in _HEAD_OF:
+            heads = (cfg.n_heads if _HEAD_OF[name] == "q"
+                     else cfg.n_kv_heads)
+            return bool(heads) and heads % tp_size == 0
+        if name in ("zproj", "xproj", "dtproj", "conv_x_w"):
+            return bool(ssm_heads) and ssm_heads % tp_size == 0
+        return True
 
     def rule(path, leaf):
         keys = tuple(
             k.key if hasattr(k, "key") else str(k) for k in path
         )
+        name = keys[-1] if keys else ""
+        leaf_tp = tp and head_ok(name)
         return _param_rule(
-            keys, tuple(leaf.shape), fsdp=fsdp, tp=tp,
-            fsdp_axis=fsdp_axis, tp_axis=tp_axis, moe_ep_axis=ep,
+            keys, tuple(leaf.shape), fsdp=fsdp, tp=leaf_tp,
+            fsdp_axis=fsdp_axis, tp_axis=tp_axis if leaf_tp else None,
+            moe_ep_axis=ep,
         )
 
     return jax.tree_util.tree_map_with_path(rule, params)
@@ -270,6 +473,25 @@ def opt_state_pspecs(opt_state: PyTree, pspecs: PyTree) -> PyTree:
     return jax.tree_util.tree_map_with_path(rule, opt_state)
 
 
+def residual_pspecs(params: PyTree, cfg, mesh: Mesh, *,
+                    fsdp: bool = True) -> PyTree:
+    """EF-residual layout of the dist train step: per param leaf,
+    ``P("pod", *model-axis entries of the param spec)``.
+
+    Residual leaves are ``(n_pods, *param_shape)``; inside the step's
+    shard_map each pod holds its own residual, sliced on the model axis
+    exactly like the gradient leaf it telescopes against.
+    """
+    pspecs = fit_pspecs(
+        params_pspecs(params, cfg, mesh, fsdp=fsdp, head_aligned=True),
+        params, mesh,
+    )
+    mo = model_axis_only(pspecs)
+    return jax.tree.map(
+        lambda s: P(POD_AXIS, *tuple(s)), mo, is_leaf=_IS_SPEC
+    )
+
+
 def state_shardings(
     params: PyTree,
     opt_state: PyTree,
@@ -278,14 +500,19 @@ def state_shardings(
     *,
     mode: str = "2d",
     fsdp: bool = True,
+    head_aligned: bool = False,
 ) -> Tuple[PyTree, PyTree]:
     """Fitted NamedSharding trees for ``(params, opt_state)`` on ``mesh``.
 
     The one-call path the train driver uses: parameter rules →
     divisibility fit → optimizer-state inheritance → NamedShardings.
+    The dist driver passes ``head_aligned=True`` so storage matches the
+    step's in-shard_map TP layout exactly (no per-step re-shard).
     """
     pspecs = fit_pspecs(
-        params_pspecs(params, cfg, mesh, fsdp=fsdp, mode=mode), params, mesh
+        params_pspecs(params, cfg, mesh, fsdp=fsdp, mode=mode,
+                      head_aligned=head_aligned),
+        params, mesh,
     )
     ospecs = fit_pspecs(opt_state_pspecs(opt_state, pspecs), opt_state, mesh)
     return to_shardings(pspecs, mesh), to_shardings(ospecs, mesh)

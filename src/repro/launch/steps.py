@@ -157,60 +157,135 @@ def make_dist_train_step(
     25/27); with ``tcfg.grad_compression == "int8"`` the cross-pod hop
     rides the blockwise-int8 + error-feedback path and ``residual``
     threads the per-pod EF state (leaves ``(n_pods, *param_shape)``,
-    sharded over "pod"; pass an empty dict otherwise).
+    sharded over "pod" and, under TP, over "model" like the gradient
+    leaf it telescopes against; pass an empty dict otherwise).
+
+    A "model" mesh axis of size tp > 1 runs REAL tensor parallelism
+    inside the shard_map region: params enter model-sharded per the
+    pspec rules of :mod:`repro.dist.sharding` (the same single source
+    of truth the pjit path partitions from), the forward runs
+    Megatron-style (column-parallel in-projections, row-parallel
+    out-projections psum'd over "model", vocab-parallel logits decoded
+    by the cross-entropy's single fused psum), and the per-group loss
+    comes out replicated across model shards — the loss metric psums
+    over "model" exactly once (inside the CE), then only over
+    (data, pod).  Because each shard's backward of the replicated
+    objective computes ``∂(Σ_shards φ)/∂(local copy)``, gradients are
+    corrected before the coded decode: model-sharded leaves divide by
+    tp, replicated leaves psum over "model" and divide by tp.
+
+    MoE archs: the λ-weighted decode is exact for the coeff-weighted
+    DATA loss only, so λ is folded into the local objective and the
+    load-balancing aux gradient is decoded with *uniform* weights
+    ``1/(n·m)`` (stragglers included — the aux regularizer must not
+    depend on the straggler pattern); the two-stage psum then runs
+    unweighted.
 
     λ arrives as a runtime (pods, data) operand, so straggler drops and
-    elastic replans at fixed (tolerance, K) never recompile.  The
+    elastic replans at fixed (tolerance, K) never recompile — TP adds
+    only static shape specialization, never λ-dependent shapes.  The
     microbatched accumulation of :func:`make_train_step` is not
     replicated here: the per-group batch is already 1/(n·m) of the
-    global batch.  A "model" mesh axis is tolerated but NOT
-    tensor-parallelized: params enter the shard_map region replicated
-    and every model shard recomputes the same local gradient (TP
-    execution lives on the pjit/dryrun path; here the axis only shards
-    params/opt-state storage between steps).
+    global batch.
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.dist import grad_sync
+    from repro.dist import sharding as shard_lib
     from repro.dist._compat import shard_map
 
-    if cfg.is_moe:
-        # the λ-weighted decode is exact for the coeff-weighted DATA
-        # loss only; the MoE load-balancing aux gradient would come out
-        # Σ λ_ij·∇aux_ij instead of ∇aux(full batch) — a silently
-        # different (straggler-dependent) regularizer than --dist off.
-        raise NotImplementedError(
-            f"{cfg.name}: coded decode of the MoE aux loss is not "
-            "implemented — run MoE archs with --dist off"
-        )
     if optimizer is None:
         optimizer = make_optimizer(default_optimizer_name(cfg, tcfg))
     lr_at = cosine_schedule(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
     pod_axis, data_axis = axes
     n_pods = mesh.shape[pod_axis]
+    n_groups = n_pods * mesh.shape[data_axis]
     compressed = tcfg.grad_compression == "int8"
 
+    ctx = shard_lib.make_shard_ctx(mesh)
+    tp = ctx.tp
+    if tp > 1:
+        shard_lib.validate_tp(cfg, tp)
+    # single source of truth: the pjit path's pspec rules, projected
+    # onto the model axis for the shard_map region (params enter
+    # model-sharded — no replicated entry, no re-shard on exit)
+    params_abs, _ = abstract_state(cfg, tcfg, optimizer)
+    pspecs = shard_lib.fit_pspecs(
+        shard_lib.params_pspecs(params_abs, cfg, mesh, fsdp=tcfg.fsdp,
+                                head_aligned=True),
+        params_abs, mesh,
+    )
+    param_specs = shard_lib.model_axis_only(pspecs)
+    tp_mask = shard_lib.model_sharded_mask(pspecs)
+    res_spec_tree = jax.tree.map(
+        lambda s: P(pod_axis, *tuple(s)), param_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
     def loss_fn(params, batch):
-        return tf.loss_and_metrics(params, cfg, batch)
+        return tf.loss_and_metrics(params, cfg, batch, ctx=ctx)
+
+    def moe_obj(params, batch, lam_s):
+        # λ folded into the data term; aux decoded with uniform weights
+        # (a SEPARATE uniform psum in effect: the unweighted two-stage
+        # psum below sums λ·∇data + (aw/nm)·∇aux exactly)
+        total, m = tf.loss_and_metrics(params, cfg, batch, ctx=ctx)
+        obj = (lam_s.astype(jnp.float32) * m["loss"]
+               + (tf.AUX_WEIGHT / n_groups) * m["aux_loss"])
+        return obj, m
+
+    def tp_correct(g):
+        """Per-shard grads of the model-replicated objective → exact.
+
+        Inside shard_map each shard's backward yields
+        ``∂(Σ_shards φ_j)/∂(its copy)``: sharded leaves carry a uniform
+        tp factor; replicated leaves additionally hold only their own
+        shard's partial paths, so they psum over "model" first.
+        """
+        if tp == 1:
+            return g
+
+        def one(gl, sharded):
+            if not sharded:
+                gl = lax.psum(gl, shard_lib.MODEL_AXIS)
+            return gl / tp
+
+        return jax.tree.map(one, g, tp_mask)
 
     def local_grads(params, batch, lam, residual):
-        (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch
-        )
         lam_s = lam.reshape(())
+        if cfg.is_moe:
+            (_, m), g = jax.value_and_grad(moe_obj, has_aux=True)(
+                params, batch, lam_s
+            )
+            psum_lam = jnp.ones((), jnp.float32)
+        else:
+            (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            psum_lam = lam_s
+        g = tp_correct(g)
         # decoded loss Σ_ij λ_ij L_ij — matches the single-host weighted
-        # loss (weights there carry coeff × λ over the full batch)
+        # loss (weights there carry coeff × λ over the full batch).
+        # Under TP the per-group loss is already psum'd over "model"
+        # exactly once (inside the CE) ⇒ replicated across model shards;
+        # reducing over (data, pod) only avoids double-counting it.
         loss = lax.psum(
             lax.psum(m["loss"] * lam_s.astype(jnp.float32), data_axis),
             pod_axis,
         )
         if compressed:
             g, residual = grad_sync.compressed_coded_psum(
-                g, lam_s, residual, n_pods=n_pods, axes=axes,
+                g, psum_lam, residual, n_pods=n_pods, axes=axes,
                 block=tcfg.grad_compression_block,
             )
         else:
-            g = grad_sync.coded_weighted_psum(g, lam_s, axes)
+            g = grad_sync.coded_weighted_psum(g, psum_lam, axes)
+        if cfg.is_moe:
+            aux = lax.psum(
+                lax.psum(m["aux_loss"] / n_groups, data_axis), pod_axis
+            )
+            return g, residual, loss, aux
         return g, residual, loss
 
     def batch_spec(key, v):
@@ -222,17 +297,18 @@ def make_dist_train_step(
 
     def train_step(params, opt_state, batch, lam, residual, step):
         batch_specs = {k: batch_spec(k, v) for k, v in batch.items()}
-        res_specs = jax.tree.map(
-            lambda r: P(pod_axis, *([None] * (r.ndim - 1))), residual
-        )
+        res_specs = res_spec_tree if residual else type(residual)()
+        out_extra = (P(),) if cfg.is_moe else ()
         fn = shard_map(
             local_grads,
             mesh=mesh,
-            in_specs=(P(), batch_specs, P(pod_axis, data_axis), res_specs),
-            out_specs=(P(), res_specs, P()),
+            in_specs=(param_specs, batch_specs,
+                      P(pod_axis, data_axis), res_specs),
+            out_specs=(param_specs, res_specs, P()) + out_extra,
             check_rep=False,
         )
-        grads, new_residual, loss = fn(params, batch, lam, residual)
+        out = fn(params, batch, lam, residual)
+        grads, new_residual, loss = out[0], out[1], out[2]
         if tcfg.grad_clip > 0:
             grads = clip_by_global_norm(grads, tcfg.grad_clip)
         lr = lr_at(step)
@@ -248,6 +324,8 @@ def make_dist_train_step(
                     for g in jax.tree.leaves(grads))
             ),
         }
+        if cfg.is_moe:
+            metrics["aux_loss"] = out[3]
         return new_params, new_state, new_residual, metrics
 
     train_step.optimizer = optimizer

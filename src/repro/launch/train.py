@@ -192,11 +192,16 @@ def main(argv=None):
                          "reference, shard_map coded collectives, or "
                          "coded with the int8+EF cross-pod hop")
     ap.add_argument("--model-shards", type=int, default=1,
-                    help="'model' mesh axis size (--dist modes). Params/"
-                         "opt-state storage shards over it, but the dist "
-                         "step's compute is data-parallel (each model "
-                         "shard re-derives the same gradient) — TP "
-                         "execution rides the pjit dryrun path")
+                    help="'model' mesh axis size (--dist modes): real "
+                         "in-shard_map tensor parallelism — params/opt-"
+                         "state shard over it AND the forward/backward "
+                         "runs Megatron-style column/row-parallel with "
+                         "psums over 'model'")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel degree override (0 = use "
+                         "--model-shards).  Validated against the arch "
+                         "config's divisibility constraints up front — "
+                         "a clear error instead of a shape crash")
     ap.add_argument("--grad-block", type=int, default=64,
                     help="int8 block size on the edge→master hop")
     ap.add_argument("--checkpoint-dir", default="")
@@ -258,16 +263,22 @@ def main(argv=None):
     # mesh (--dist modes); imports stay lazy so the single-host path
     # never touches jax.sharding machinery
     mesh = None
+    model_shards = args.tp or args.model_shards
     if args.dist != "off":
         from repro.dist import grad_sync
         from repro.dist.mesh import make_test_mesh
+        from repro.dist.sharding import validate_tp
 
-        mesh = make_test_mesh(args.n_edges, args.n_workers,
-                              args.model_shards)
+        validate_tp(cfg, model_shards)
+        mesh = make_test_mesh(args.n_edges, args.n_workers, model_shards)
         print(f"[train] dist={args.dist}: mesh "
               f"(pod={args.n_edges} × data={args.n_workers} × "
-              f"model={args.model_shards}), "
-              f"grad_compression={tcfg.grad_compression}")
+              f"model={model_shards}), "
+              f"grad_compression={tcfg.grad_compression}"
+              + (f", TP degree {model_shards}" if model_shards > 1 else ""))
+    elif args.tp > 1:
+        raise SystemExit("--tp requires a --dist mode (the single-host "
+                         "reference loop has no model mesh axis)")
 
     # data: one resumable stream per dataset part
     streams = []
@@ -333,6 +344,7 @@ def main(argv=None):
 
         param_sh, opt_sh = shard_lib.state_shardings(
             params, opt_state, cfg, mesh, fsdp=tcfg.fsdp,
+            head_aligned=True,
         )
         params = jax.device_put(params, param_sh)
         opt_state = jax.device_put(opt_state, opt_sh)
@@ -352,11 +364,12 @@ def main(argv=None):
                 )
             else:
                 residual = comp_lib.init_pod_residuals(params, args.n_edges)
-            res_sh = jax.tree.map(
-                lambda r: NamedSharding(
-                    mesh, P("pod", *([None] * (r.ndim - 1)))
-                ),
-                residual,
+            # under TP the residual follows its gradient leaf onto the
+            # model axis (same pspec rules as the step's shard_map)
+            res_sh = shard_lib.to_shardings(
+                shard_lib.residual_pspecs(params, cfg, mesh,
+                                          fsdp=tcfg.fsdp),
+                mesh,
             )
             residual = jax.device_put(residual, res_sh)
         train_step = jax.jit(

@@ -26,6 +26,20 @@ from jax import lax
 NEG_INF = -1e30
 
 
+def local_head_counts(p, head_dim: int) -> Tuple[int, int]:
+    """(H, Kv) as seen by THIS shard's projection weights.
+
+    Under tensor parallelism (inside shard_map) the attention weights
+    arrive as per-shard column/row blocks, so the head counts must be
+    derived from the local shapes, not the config: Q heads shard over
+    the model axis while K/V heads replicate whenever ``n_kv_heads``
+    does not divide the TP degree (Megatron GQA fallback).  Everything
+    downstream (RoPE, GQA grouping, flash/chunked attention) is
+    head-count agnostic — it keys off these shapes.
+    """
+    return p["wq"].shape[-1] // head_dim, p["wk"].shape[-1] // head_dim
+
+
 # ----------------------------------------------------------------------
 # RoPE
 # ----------------------------------------------------------------------

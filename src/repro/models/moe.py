@@ -3,16 +3,23 @@ dispatch (gather/scatter — no O(N·E·C) one-hot einsums, which would
 dwarf the useful expert FLOPs at E=128).
 
 Sharding intent: expert-parallel over the ``model`` mesh axis when
-``n_experts`` divides it (llama4's 128e), otherwise experts replicated
-with the per-expert FFN dim tensor-parallel (granite's 40e, d_ff=512).
-The dispatch gathers become all-to-all-ish collectives under SPMD.
+``n_experts`` divides it (llama4's 128e), otherwise experts replicated.
+The pjit path leaves the dispatch gathers to SPMD; the dist path
+(``ShardCtx`` active, inside shard_map) runs explicit expert
+parallelism: the router is column-parallel with its logits all-gathered
+(routing and the load-balancing aux loss need the full expert axis),
+every shard dispatches only to its own expert block, and the partial
+expert outputs — plus the column/row-parallel shared-expert branch —
+are combined by a single psum over the model axis.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.dist.sharding import NULL_CTX
 
 
 def init_moe(rng, d: int, ff: int, E: int, n_shared: int, dtype) -> Dict:
@@ -40,14 +47,25 @@ def moe_ffn(
     x: jnp.ndarray,  # (B, S, d)
     top_k: int,
     capacity_factor: float = 1.25,
+    ctx=NULL_CTX,
+    shared_width: Optional[int] = None,  # global n_shared·ff (TP detect)
+    n_experts: Optional[int] = None,     # global E (TP detect)
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (output (B,S,d), load-balancing aux loss scalar)."""
     B, S, d = x.shape
-    E = params["router"].shape[1]
     N = B * S
     xf = x.reshape(N, d)
 
     logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    # TP: when the router is column-parallel (E divides tp), gather the
+    # expert axis so routing/top-k/aux see all experts (E is small;
+    # (N, E) is cheap).  When fit_pspecs dropped the expert sharding
+    # (E % tp != 0) the logits are already full-width — gathering again
+    # would duplicate experts and corrupt the routing.
+    if (ctx.active and n_experts is not None
+            and logits.shape[-1] != n_experts):
+        logits = ctx.all_gather(logits, axis=-1)
+    E = logits.shape[-1]
     probs = jax.nn.softmax(logits, axis=-1)  # (N, E)
     top_p, top_e = jax.lax.top_k(probs, top_k)  # (N, k)
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
@@ -58,6 +76,12 @@ def moe_ffn(
     aux = E * jnp.sum(fe * pe)
 
     # ---- sort-based dispatch with capacity -----------------------------
+    # TP: each shard owns the contiguous expert block [e0, e0+E_local);
+    # routing stays global, the dispatch keeps only local experts and
+    # the partial outputs are psum'd below.
+    E_local = params["we_g"].shape[0]
+    experts_sharded = ctx.active and E_local != E
+    e0 = ctx.axis_index() * E_local if experts_sharded else 0
     cap = int(max(1, capacity_factor * N * top_k / E))
     flat_e = top_e.reshape(-1)  # (N·k,)
     order = jnp.argsort(flat_e, stable=True)
@@ -69,12 +93,16 @@ def moe_ffn(
     )
     rank = jnp.arange(N * top_k) - seg_start[sorted_e]
     keep = rank < cap
-    slot = jnp.where(keep, sorted_e * cap + rank, E * cap)  # sentinel last
+    if experts_sharded:
+        keep = keep & (sorted_e >= e0) & (sorted_e < e0 + E_local)
+    slot = jnp.where(
+        keep, (sorted_e - e0) * cap + rank, E_local * cap
+    )  # sentinel last
 
     tok_of_slot = order // top_k  # original token of each sorted entry
-    buf = jnp.zeros((E * cap + 1, d), x.dtype)
+    buf = jnp.zeros((E_local * cap + 1, d), x.dtype)
     buf = buf.at[slot].set(xf[tok_of_slot])
-    buf = buf[: E * cap].reshape(E, cap, d)
+    buf = buf[: E_local * cap].reshape(E_local, cap, d)
 
     # ---- expert FFN (swiglu), batched over experts ---------------------
     h = jax.nn.silu(
@@ -82,7 +110,8 @@ def moe_ffn(
     ) * jnp.einsum("ecd,edf->ecf", buf, params["we_u"])
     out_buf = jnp.einsum("ecf,efd->ecd", h, params["we_d"])
     out_buf = jnp.concatenate(
-        [out_buf.reshape(E * cap, d), jnp.zeros((1, d), out_buf.dtype)], 0
+        [out_buf.reshape(E_local * cap, d), jnp.zeros((1, d), out_buf.dtype)],
+        0,
     )
 
     # ---- combine: gather back, weight, sum over the k copies -----------
@@ -92,9 +121,25 @@ def moe_ffn(
     y = jnp.zeros((N, d), out_buf.dtype).at[tok_of_slot].add(contrib)
 
     # ---- shared experts (llama4) ---------------------------------------
+    sh = None
+    sh_sharded = False
     if "ws_g" in params:
         sh = jax.nn.silu(xf @ params["ws_g"]) * (xf @ params["ws_u"])
-        y = y + sh @ params["ws_d"]
+        sh = sh @ params["ws_d"]
+        sh_sharded = (ctx.active and shared_width is not None
+                      and params["ws_g"].shape[-1] != shared_width)
+    # combine with a single psum over the model axis: partial terms
+    # (sharded experts / column-row-parallel shared branch) sum inside,
+    # replicated terms stay outside
+    partial = [t for t, p in ((y, experts_sharded), (sh, sh_sharded)) if p]
+    full = [t for t, p in ((y, experts_sharded), (sh, sh_sharded))
+            if t is not None and not p]
+    if partial:
+        terms = [ctx.psum(partial[0] if len(partial) == 1
+                          else partial[0] + partial[1])] + full
+    else:
+        terms = full
+    y = terms[0] if len(terms) == 1 else terms[0] + terms[1]
     return y.reshape(B, S, d).astype(x.dtype), aux
 
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist.sharding import NULL_CTX
+
 _C = 8.0
 _MAX_SQRT_GRAD = 1000.0
 
@@ -47,22 +49,40 @@ def init_rglru_block(rng, d: int, r: int, d_conv: int, dtype) -> Dict:
     }
 
 
-def _gates(params, y):
+def _gates(params, y, ctx=NULL_CTX):
+    """Recurrence/input gates on ``y``.
+
+    TP (ctx active): ``y`` carries this shard's block of the recurrence
+    width and ``w_a``/``w_x`` are row-parallel — one psum restores the
+    full pre-activations, which are then re-sliced to the local block so
+    the elementwise recurrence stays shard-local.
+    """
     yf = y.astype(jnp.float32)
-    rgate = jax.nn.sigmoid(yf @ params["w_a"].astype(jnp.float32)
-                           + params["b_a"])
-    igate = jax.nn.sigmoid(yf @ params["w_x"].astype(jnp.float32)
-                           + params["b_x"])
-    log_a = -_C * rgate * jax.nn.softplus(params["lam"])  # log a_t ≤ 0
+    r_local = y.shape[-1]
+    r_full = params["w_a"].shape[1]
+    pre_a = yf @ params["w_a"].astype(jnp.float32)
+    pre_x = yf @ params["w_x"].astype(jnp.float32)
+    if ctx.active and params["w_a"].shape[0] != r_full:
+        # row-parallel gates: one psum for both pre-activation stacks
+        pre_a, pre_x = ctx.psum(jnp.stack([pre_a, pre_x]))
+    rgate = jax.nn.sigmoid(
+        ctx.local_block(pre_a + params["b_a"], r_local)
+    )
+    igate = jax.nn.sigmoid(
+        ctx.local_block(pre_x + params["b_x"], r_local)
+    )
+    lam = ctx.local_block(params["lam"], r_local)
+    log_a = -_C * rgate * jax.nn.softplus(lam)  # log a_t ≤ 0
     a = jnp.exp(log_a)
     mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12))
     b = mult * igate * yf
     return a, b
 
 
-def rglru_scan(params, y: jnp.ndarray, h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def rglru_scan(params, y: jnp.ndarray, h0=None,
+               ctx=NULL_CTX) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full-sequence RG-LRU via associative scan. y: (B, S, r)."""
-    a, b = _gates(params, y)
+    a, b = _gates(params, y, ctx)
     if h0 is not None:
         # fold the initial state into the first step
         b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
@@ -92,13 +112,24 @@ def _causal_conv(seq, w, b):
     return out + b
 
 
-def rglru_block_forward(params, x: jnp.ndarray, cfg) -> jnp.ndarray:
-    """Full recurrent block (train/prefill). x: (B, S, d)."""
+def rglru_block_forward(params, x: jnp.ndarray, cfg,
+                        ctx=NULL_CTX) -> jnp.ndarray:
+    """Full recurrent block (train/prefill). x: (B, S, d).
+
+    TP: gate/lin branches are column-parallel over the recurrence
+    width, ``w_out`` row-parallel (psum restores the full d output).
+    """
     gate = jax.nn.gelu(x @ params["w_gate"])
     y = x @ params["w_lin"]
-    y = _causal_conv(y, params["conv_w"], params["conv_b"])
-    h, _ = rglru_scan(params, y)
-    return (gate * h) @ params["w_out"]
+    r_local = y.shape[-1]
+    y = _causal_conv(y, params["conv_w"],
+                     ctx.local_block(params["conv_b"], r_local))
+    h, _ = rglru_scan(params, y, ctx=ctx)
+    out = (gate * h) @ params["w_out"]
+    if ctx.active and params["w_out"].shape[0] != (cfg.lru_width
+                                                  or cfg.d_model):
+        out = ctx.psum(out)
+    return out
 
 
 def rglru_init_cache(cfg, batch: int, dtype=jnp.float32) -> Dict:

@@ -14,6 +14,16 @@ Decode is the O(1) recurrent update on a carried (B, nh, hd, N) state.
 TPU adaptation note: chunk size is chosen so the intra-chunk matrices
 (Q×Q and hd×N) are multiples of the MXU tile; no custom kernel needed —
 the SSD form is already matmul-dominant, which is the paper's own point.
+
+Tensor parallelism (dist path, ``ShardCtx`` active): the projections are
+head-block structured — ``zproj``/``xproj``/``dtproj`` (and the xs
+depthwise conv) are column-parallel over whole SSD heads, B/C streams
+(``bcproj`` + their conv) replicate (they are shared across heads in the
+minimal SSD form), per-head vectors (A_log, D, dt_bias) are sliced to
+the local head block, and ``out_proj`` is row-parallel with one psum.
+This per-segment split is exactly why the in-projection is separate
+leaves instead of one fused matrix: a blockwise shard of the fused
+``in_proj`` would cut across the z/x/B/C/dt segment boundaries.
 """
 from __future__ import annotations
 
@@ -23,37 +33,36 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.dist.sharding import NULL_CTX
+
 
 def init_ssm(rng, d: int, expand: int, d_state: int, d_conv: int,
              head_dim: int, dtype) -> Dict:
     di = expand * d
     nh = di // head_dim
-    conv_dim = di + 2 * d_state
-    ks = jax.random.split(rng, 6)
+    ks = jax.random.split(rng, 7)
     scale = 0.02
     return {
-        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * d_state + nh))
-                    * scale).astype(dtype),
-        "conv_w": (jax.random.normal(ks[1], (d_conv, conv_dim)) * scale
+        # column-parallel, head-block structured (see module docstring)
+        "zproj": (jax.random.normal(ks[0], (d, di)) * scale).astype(dtype),
+        "xproj": (jax.random.normal(ks[1], (d, di)) * scale).astype(dtype),
+        # B/C streams: shared across heads ⇒ replicated under TP
+        "bcproj": (jax.random.normal(ks[2], (d, 2 * d_state)) * scale
                    ).astype(dtype),
-        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dtproj": (jax.random.normal(ks[3], (d, nh)) * scale).astype(dtype),
+        "conv_x_w": (jax.random.normal(ks[4], (d_conv, di)) * scale
+                     ).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[5], (d_conv, 2 * d_state))
+                      * scale).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * d_state,), dtype),
         "A_log": jnp.log(
             jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)
         ),
         "D": jnp.ones((nh,), jnp.float32),
         "dt_bias": jnp.zeros((nh,), jnp.float32),
-        "out_proj": (jax.random.normal(ks[2], (di, d)) * scale).astype(dtype),
+        "out_proj": (jax.random.normal(ks[6], (di, d)) * scale).astype(dtype),
     }
-
-
-def _split_proj(params, x, d: int, expand: int, d_state: int, head_dim: int):
-    di = expand * d
-    nh = di // head_dim
-    zxbcdt = x @ params["in_proj"]
-    z, xs, Bc, Cc, dt = jnp.split(
-        zxbcdt, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1
-    )
-    return z, xs, Bc, Cc, dt, di, nh
 
 
 def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
@@ -149,30 +158,50 @@ def ssd_reference(xbar, logdA, Bc, Cc, h0=None):
     return jnp.stack(ys, axis=1), h
 
 
+def _head_params(params: Dict, nh_local: int, ctx):
+    """Per-head vectors sliced to this shard's head block (TP no-op
+    when the projections are unsharded)."""
+    A_log = ctx.local_block(params["A_log"], nh_local)
+    D = ctx.local_block(params["D"], nh_local)
+    dt_bias = ctx.local_block(params["dt_bias"], nh_local)
+    return A_log, D, dt_bias
+
+
 def ssm_forward(
     params: Dict,
     x: jnp.ndarray,  # (B, S, d)
     cfg,
+    ctx=NULL_CTX,
 ) -> jnp.ndarray:
     """Full-sequence Mamba-2 block (train / prefill)."""
-    d = x.shape[-1]
-    z, xs, Bc, Cc, dt, di, nh = _split_proj(
-        params, x, d, cfg.expand, cfg.d_state, cfg.ssm_head_dim
-    )
-    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
-    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
-    xs, Bc, Cc = jnp.split(conv_out, [di, di + cfg.d_state], axis=-1)
     hd = cfg.ssm_head_dim
-    xh = xs.reshape(*xs.shape[:2], nh, hd)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
-    A = -jnp.exp(params["A_log"])
+    z = x @ params["zproj"]      # (B, S, di_local)
+    xs = x @ params["xproj"]     # (B, S, di_local)
+    bc = x @ params["bcproj"]    # (B, S, 2N) replicated under TP
+    dt = x @ params["dtproj"]    # (B, S, nh_local)
+    di_l = xs.shape[-1]
+    nh_l = di_l // hd
+    xs = _causal_conv(
+        xs, params["conv_x_w"],
+        ctx.local_block(params["conv_x_b"], di_l),
+    )
+    bc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"])
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    A_log, D, dt_bias = _head_params(params, nh_l, ctx)
+    xh = xs.reshape(*xs.shape[:2], nh_l, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
+    A = -jnp.exp(A_log)
     xbar = xh.astype(jnp.float32) * dt[..., None]
     logdA = dt * A
-    y, _ = ssd_chunked(xbar, logdA, Bc, Cc, chunk=min(cfg.ssm_chunk, x.shape[1]))
-    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
-    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y, _ = ssd_chunked(xbar, logdA, Bc, Cc,
+                       chunk=min(cfg.ssm_chunk, x.shape[1]))
+    y = y + D[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di_l).astype(x.dtype)
     y = y * jax.nn.silu(z)  # gated
-    return y @ params["out_proj"]
+    out = y @ params["out_proj"]
+    if ctx.active and params["out_proj"].shape[0] != cfg.expand * cfg.d_model:
+        out = ctx.psum(out)  # row-parallel out-projection
+    return out
 
 
 def ssm_init_cache(cfg, batch: int, dtype=jnp.float32) -> Dict:
@@ -191,19 +220,24 @@ def ssm_decode_step(
     cache: Dict,
     cfg,
 ) -> Tuple[jnp.ndarray, Dict]:
-    d = x.shape[-1]
-    z, xs, Bc, Cc, dt, di, nh = _split_proj(
-        params, x, d, cfg.expand, cfg.d_state, cfg.ssm_head_dim
+    di = cfg.expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    z = x @ params["zproj"]
+    xs = x @ params["xproj"]
+    bc = x @ params["bcproj"]
+    dt = x @ params["dtproj"]
+    conv_in = jnp.concatenate([xs, bc], axis=-1)  # (B,1,di+2N)
+    hist = jnp.concatenate(
+        [cache["conv"], conv_in.astype(cache["conv"].dtype)], axis=1
     )
-    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)  # (B,1,conv_dim)
-    hist = jnp.concatenate([cache["conv"], conv_in.astype(cache["conv"].dtype)], axis=1)
-    w = params["conv_w"]
+    w = jnp.concatenate([params["conv_x_w"], params["conv_bc_w"]], axis=-1)
+    b = jnp.concatenate([params["conv_x_b"], params["conv_bc_b"]], axis=-1)
     K = w.shape[0]
     conv_out = jax.nn.silu(
-        jnp.einsum("bkc,kc->bc", hist[:, -K:], w) + params["conv_b"]
+        jnp.einsum("bkc,kc->bc", hist[:, -K:], w) + b
     )[:, None, :]
     xs, Bc, Cc = jnp.split(conv_out, [di, di + cfg.d_state], axis=-1)
-    hd = cfg.ssm_head_dim
     xh = xs.reshape(xs.shape[0], nh, hd).astype(jnp.float32)
     dt1 = jax.nn.softplus(
         dt[:, 0].astype(jnp.float32) + params["dt_bias"]

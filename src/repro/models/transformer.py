@@ -30,6 +30,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import (
+    NULL_CTX,
+    ShardCtx,
     anchor_activations,
     anchor_embed,
     anchor_logits,
@@ -41,6 +43,11 @@ from repro.models import rglru as rglru_lib
 from repro.models import ssm as ssm_lib
 
 PyTree = Any
+
+#: weight of the MoE load-balancing aux loss in the training objective —
+#: the dist train step reuses this to decode the aux gradient with
+#: uniform weights (separate psum from the λ-weighted data term)
+AUX_WEIGHT = 0.01
 
 
 # ----------------------------------------------------------------------
@@ -198,14 +205,32 @@ def _attn_apply(
     positions: jnp.ndarray,
     kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     kv_positions: Optional[jnp.ndarray] = None,
+    ctx: ShardCtx = NULL_CTX,
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
-    """Returns (output, (k, v) for caching). kv_override ⇒ cross-attn."""
+    """Returns (output, (k, v) for caching). kv_override ⇒ cross-attn.
+
+    TP (ctx active): in-projections are column-parallel (this shard's
+    head block — K/V replicate when n_kv_heads doesn't divide tp), the
+    out-projection is row-parallel, finished by one psum over "model".
+    """
     B, S, d = x.shape
-    H, Kv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Dh = cfg.head_dim
+    H, Kv = attn_lib.local_head_counts(p, Dh)
+    # replicated-KV GQA fallback (TP with n_kv_heads ∤ tp): every shard
+    # computes all KV heads but its Q block lives inside ONE KV group
+    # (validate_tp guarantees tp % n_kv_heads == 0) — slice that head so
+    # the local Q→KV pairing matches the unsharded model.
+    kv_slice = (ctx.active and H != cfg.n_heads and Kv == cfg.n_kv_heads
+                and Kv > 1)
     q = _split_heads(x @ p["wq"], H, Dh)
     if kv_override is None:
         k = _split_heads(x @ p["wk"], Kv, Dh)
         v = _split_heads(x @ p["wv"], Kv, Dh)
+        if kv_slice:
+            kv_head = ctx.axis_index() * Kv // ctx.tp
+            k = lax.dynamic_slice_in_dim(k, kv_head, 1, axis=2)
+            v = lax.dynamic_slice_in_dim(v, kv_head, 1, axis=2)
+            Kv = 1
         k_pos_flat = positions[0] if positions.ndim == 3 else positions[0:1]
         if kind != "enc" or cfg.rope_theta > 0:
             q = attn_lib.apply_rope(
@@ -217,6 +242,11 @@ def _attn_apply(
         kv, kvp = (k, v), None
     else:
         k, v = kv_override
+        if kv_slice:
+            kv_head = ctx.axis_index() * Kv // ctx.tp
+            k = lax.dynamic_slice_in_dim(k, kv_head, 1, axis=2)
+            v = lax.dynamic_slice_in_dim(v, kv_head, 1, axis=2)
+            Kv = 1
         kv, kvp = (k, v), kv_positions
     causal = kind != "enc" and kv_override is None
     window = cfg.window if kind == "local" else 0
@@ -238,13 +268,22 @@ def _attn_apply(
             kv_chunk=cfg.attn_chunk, q_chunk=cfg.q_chunk,
         )
     out = out.reshape(B, S, H * Dh) @ p["wo"]
+    if ctx.active and H != cfg.n_heads:
+        out = ctx.psum(out)  # row-parallel out-projection
     return out, kv
 
 
-def _mlp_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig):
+def _mlp_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+               ctx: ShardCtx = NULL_CTX):
     if cfg.mlp == "swiglu" and "wg" in p:
-        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
-    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+        out = (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+        sharded = p["wd"].shape[0] != (cfg.d_ff_dense or cfg.d_ff)
+    else:
+        out = jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+        sharded = p["w2"].shape[0] != (cfg.d_ff_dense or cfg.d_ff)
+    if ctx.active and sharded:
+        out = ctx.psum(out)  # row-parallel down-projection
+    return out
 
 
 def _ckpt_name(x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
@@ -273,45 +312,51 @@ def _layer_apply(
     positions: jnp.ndarray,
     enc_out: Optional[jnp.ndarray] = None,
     enc_positions: Optional[jnp.ndarray] = None,
+    ctx: ShardCtx = NULL_CTX,
 ) -> Tuple[jnp.ndarray, PyTree, jnp.ndarray]:
     """Returns (x_out, cache_entry, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = _norm(p["norm1"], x)
     cache_entry: PyTree = ()
     if kind in ("global", "local", "enc"):
-        out, (k, v) = _attn_apply(p["attn"], h, cfg, kind, positions)
+        out, (k, v) = _attn_apply(p["attn"], h, cfg, kind, positions,
+                                  ctx=ctx)
         cache_entry = {
             "k": k.reshape(*k.shape[:2], -1),
             "v": v.reshape(*v.shape[:2], -1),
         }
     elif kind == "ssm":
-        out = ssm_lib.ssm_forward(p["ssm"], h, cfg)
+        out = ssm_lib.ssm_forward(p["ssm"], h, cfg, ctx=ctx)
     elif kind == "recurrent":
-        out = rglru_lib.rglru_block_forward(p["rglru"], h, cfg)
+        out = rglru_lib.rglru_block_forward(p["rglru"], h, cfg, ctx=ctx)
     else:
         raise ValueError(kind)
     x = x + _ckpt_name(out, cfg)
     if "xattn" in p and enc_out is not None:
         h = _norm(p["norm_x"], x)
+        kv_loc = attn_lib.local_head_counts(p["xattn"], cfg.head_dim)[1]
         out, _ = _attn_apply(
             p["xattn"], h, cfg, "cross", positions,
             kv_override=(
-                _split_heads(enc_out @ p["xattn"]["wk"], cfg.n_kv_heads,
+                _split_heads(enc_out @ p["xattn"]["wk"], kv_loc,
                              cfg.head_dim),
-                _split_heads(enc_out @ p["xattn"]["wv"], cfg.n_kv_heads,
+                _split_heads(enc_out @ p["xattn"]["wv"], kv_loc,
                              cfg.head_dim),
             ),
             kv_positions=enc_positions,
+            ctx=ctx,
         )
         x = x + out
     if "norm2" in p:
         h = _norm(p["norm2"], x)
         if "moe" in p:
             out, aux = moe_lib.moe_ffn(
-                p["moe"], h, cfg.top_k, cfg.capacity_factor
+                p["moe"], h, cfg.top_k, cfg.capacity_factor,
+                ctx=ctx, shared_width=cfg.n_shared_experts * cfg.d_ff,
+                n_experts=cfg.n_experts,
             )
         else:
-            out = _mlp_apply(p["mlp"], h, cfg)
+            out = _mlp_apply(p["mlp"], h, cfg, ctx=ctx)
         x = x + _ckpt_name(out, cfg)
     return x, cache_entry, aux
 
@@ -334,25 +379,22 @@ def cast_params(params: PyTree, cfg: ModelConfig) -> PyTree:
     return jax.tree.map(cast, params)
 
 
-def _embed(params, cfg, tokens):
+def _embed(params, cfg, tokens, ctx: ShardCtx = NULL_CTX):
     # Gathers from a sharded table hit an SPMD-partitioner verifier bug
     # (invalid dynamic-slice in the "last resort" path).  The table is
     # stored d-sharded; we all-gather a bf16 working copy at the use
     # site — the gather is then trivially partitionable on the batch
     # axis and the all-gather hoists out of the microbatch loop.
-    table = anchor_replicated(
-        params["embed"]["table"].astype(jnp.dtype(cfg.dtype))
-    )
-    x = table[tokens]
+    table = params["embed"]["table"].astype(jnp.dtype(cfg.dtype))
+    if ctx.active and table.shape[-1] != cfg.d_model:
+        # TP: gather the per-shard embedding slices back to full width
+        # (the transpose is a reduce-scatter ⇒ exact local table grads)
+        return ctx.all_gather(table[tokens], axis=-1)
+    x = anchor_replicated(table)[tokens]
     return anchor_embed(x)
 
 
-def _unembed(params, cfg, x):
-    x = _norm(params["final_norm"], x)
-    if cfg.tie_embeddings:
-        w = params["embed"]["table"].T
-    else:
-        w = params["head"]["w"]
+def _matmul_f32(x, w, cfg):
     # accumulate the vocab matmul in f32 without materializing f32 weights
     return jax.lax.dot_general(
         x.astype(jnp.dtype(cfg.dtype)), w,
@@ -361,13 +403,31 @@ def _unembed(params, cfg, x):
     )
 
 
-def _run_encoder(params, cfg, frames):
+def _unembed(params, cfg, x, ctx: ShardCtx = NULL_CTX):
+    x = _norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].T
+        if ctx.active and w.shape[0] != cfg.d_model:
+            # TP, tied head: the transposed table is row-parallel —
+            # slice x to this shard's d-block and psum the partial
+            # logits (full-vocab logits, ordinary cross-entropy after)
+            return ctx.psum(
+                _matmul_f32(ctx.local_block(x, w.shape[0]), w, cfg)
+            )
+        return _matmul_f32(x, w, cfg)
+    # untied head (d, V): column-parallel ⇒ vocab-parallel local logits;
+    # the cross-entropy decodes them with one fused psum (see
+    # loss_and_metrics)
+    return _matmul_f32(x, params["head"]["w"], cfg)
+
+
+def _run_encoder(params, cfg, frames, ctx: ShardCtx = NULL_CTX):
     """Whisper encoder over precomputed frontend frames (B, T_enc, d)."""
     x = frames.astype(jnp.dtype(cfg.dtype))
     pos = jnp.arange(x.shape[1])[None].repeat(x.shape[0], 0)
 
     def body(x, lp):
-        x, _, _ = _layer_apply(lp, x, "enc", cfg, pos)
+        x, _, _ = _layer_apply(lp, x, "enc", cfg, pos, ctx=ctx)
         return x, None
 
     body = _remat_wrap(body, cfg)
@@ -384,11 +444,13 @@ def forward(
     visual_embeds: Optional[jnp.ndarray] = None,  # (B, n_vis, d) vlm stub
     return_cache: bool = False,
     last_only: bool = False,  # unembed only the final position (prefill)
+    ctx: Optional[ShardCtx] = None,  # TP execution seam (dist path)
 ) -> Any:
     """Full-sequence forward.  Returns logits (B,S,V) [+ cache, aux]."""
+    ctx = ctx or NULL_CTX
     B, S = tokens.shape
     params = cast_params(params, cfg)
-    x = _embed(params, cfg, tokens)
+    x = _embed(params, cfg, tokens, ctx)
     if visual_embeds is not None:
         # VLM stub: frontend embeddings replace the first n_vis positions
         n_vis = visual_embeds.shape[1]
@@ -403,7 +465,7 @@ def forward(
     if cfg.is_encdec:
         if enc_frames is None:
             raise ValueError("encoder-decoder model needs enc_frames")
-        enc_out = _run_encoder(params, cfg, enc_frames)
+        enc_out = _run_encoder(params, cfg, enc_frames, ctx)
         enc_pos = jnp.arange(enc_out.shape[1])
 
     P = len(cfg.block_pattern)
@@ -416,7 +478,7 @@ def forward(
             kind = cfg.block_pattern[k]
             x, ce, aux = _layer_apply(
                 group_params[f"p{k}"], x, kind, cfg, positions,
-                enc_out, enc_pos,
+                enc_out, enc_pos, ctx=ctx,
             )
             x = anchor_activations(x)
             caches[f"p{k}"] = ce
@@ -431,13 +493,13 @@ def forward(
         kind = cfg.block_pattern[k]
         x, ce, aux = _layer_apply(
             params["rest"][f"r{k}"], x, kind, cfg, positions,
-            enc_out, enc_pos,
+            enc_out, enc_pos, ctx=ctx,
         )
         rest_caches[f"r{k}"] = ce
         aux_total = aux_total + aux
     if last_only:
         x = x[:, -1:]
-    logits = anchor_logits(_unembed(params, cfg, x))
+    logits = anchor_logits(_unembed(params, cfg, x, ctx))
     if return_cache:
         cache = {"groups": g_caches, "rest": rest_caches}
         return logits, cache, aux_total
@@ -448,26 +510,51 @@ def loss_and_metrics(
     params: PyTree,
     cfg: ModelConfig,
     batch: Dict[str, jnp.ndarray],
-    aux_weight: float = 0.01,
+    aux_weight: float = AUX_WEIGHT,
+    ctx: Optional[ShardCtx] = None,
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Weighted token cross-entropy.
 
     ``batch["weights"]`` (B,S) carries padding masks AND the HGC coding
     coefficients (per-example coded weights — see DESIGN.md §3): the
     gradient of this loss IS the worker's encoded message ``G_ij``.
+
+    TP (ctx active, untied head): logits arrive vocab-parallel and the
+    cross-entropy decodes them with exactly ONE fused psum over the
+    model axis (logsumexp partials + target log-likelihood together) —
+    the loss is then replicated across model shards, so the caller's
+    pod/data reductions must NOT psum it over "model" again.
     """
+    ctx = ctx or NULL_CTX
     logits, aux = forward(
         params, cfg, batch["tokens"],
         positions=batch.get("positions"),
         enc_frames=batch.get("enc_frames"),
         visual_embeds=batch.get("visual_embeds"),
+        ctx=ctx,
     )
     targets = batch["targets"]
     V = logits.shape[-1]
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(
-        logits, targets[..., None], axis=-1
-    )[..., 0]
+    if ctx.active and V != cfg.vocab:
+        # vocab-parallel CE: max-shift via pmax (stop_gradient — the
+        # shift cancels analytically), then one psum carries both the
+        # local exp-sums and this shard's masked target logit
+        m = ctx.pmax(lax.stop_gradient(jnp.max(logits, axis=-1)))
+        s = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+        v0 = ctx.axis_index() * V
+        tloc = targets - v0
+        valid = (tloc >= 0) & (tloc < V)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(tloc, 0, V - 1)[..., None], axis=-1
+        )[..., 0]
+        ll = jnp.where(valid, ll, 0.0)
+        s, ll = ctx.psum(jnp.stack([s, ll]))
+        lse = jnp.log(s) + m
+    else:
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1
+        )[..., 0]
     nll = lse - ll
     w = batch.get("weights")
     if w is None:
