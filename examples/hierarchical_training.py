@@ -1,16 +1,17 @@
 """End-to-end driver: train a transformer under HGC coded aggregation.
 
-Wraps the production driver (repro.launch.train) — JNCSS planning,
-coded per-example weights, straggler sampling, checkpoints, elastic
-replanning.  The reduced llama3-family config runs a few hundred steps
-on CPU; pass --full on a TPU cluster for the real 8B config.
+The 5-line public-API path: a `CodedCluster` (topology + runtime
+model), a planner strategy, and a `CodedSession` that owns the mesh,
+the compiled coded train step, JNCSS replanning and checkpoints.  The
+reduced llama3-family config runs a few hundred steps on CPU; pass
+--full on a TPU cluster for the real 8B config.
 
 Run:  PYTHONPATH=src python examples/hierarchical_training.py [--steps N]
 """
 import argparse
-import sys
 
-from repro.launch.train import main as train_main
+from repro.api import CodedCluster, CodedSession
+from repro.configs.registry import get_config, get_smoke_config
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -25,18 +26,13 @@ if __name__ == "__main__":
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
-    argv = [
-        "--arch", args.arch,
-        "--steps", str(args.steps),
-        "--scheme", "hgc_jncss",
-        "--n-edges", "2", "--n-workers", "4",
-        "--seq-len", "64",
-        "--dist", args.dist,
-        "--checkpoint-dir", args.checkpoint_dir,
-        "--checkpoint-every", "50",
-        "--replan-every", "100",
-        "--resume",
-    ]
-    if not args.full:
-        argv.append("--smoke")
-    train_main(argv)
+    cfg = (get_config if args.full else get_smoke_config)(args.arch)
+    cluster = CodedCluster.homogeneous(n_edges=2, n_workers=4)
+    session = CodedSession(
+        cluster, cfg,
+        planner="jncss", mode=args.dist,
+        seq_len=64, total_steps=args.steps,
+        checkpoint_dir=args.checkpoint_dir, checkpoint_every=50,
+        resume=True,
+    )
+    session.fit(replan_every=100)

@@ -7,8 +7,7 @@ import argparse
 
 import numpy as np
 
-from repro.core.runtime_model import paper_cluster
-from repro.sim.simulator import simulate_training
+from repro.api import paper_cluster, simulate_training
 
 SCHEMES = ("uncoded", "greedy", "cgc_w", "cgc_e", "standard_gc",
            "hgc", "hgc_jncss")

@@ -1,18 +1,26 @@
-"""Quickstart: the paper's pipeline in 60 lines.
+"""Quickstart: the paper's pipeline in 60 lines, through `repro.api`.
 
   1. a hierarchical cluster (3 edges × 3 workers — paper Example 1),
   2. the HGC two-layer code at tolerance (s_e=1, s_w=1),
   3. exact gradient recovery under stragglers,
-  4. JNCSS picking the optimal tolerance for a heterogeneous cluster.
+  4. JNCSS picking the optimal tolerance for a heterogeneous cluster,
+  5. the same system as ONE object: CodedCluster → CodedSession.fit().
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import jncss, tradeoff
-from repro.core.hgc import HGCCode
-from repro.core.runtime_model import paper_cluster
-from repro.core.topology import Tolerance, Topology
+from repro.api import (
+    CodedCluster,
+    CodedSession,
+    HGCCode,
+    Tolerance,
+    Topology,
+    jncss,
+    paper_cluster,
+    tradeoff,
+)
+from repro.configs.registry import get_smoke_config
 
 # ---- 1. topology & tolerance (paper Example 1) -------------------------
 topo = Topology.uniform(3, 3)
@@ -47,3 +55,14 @@ print(f"  optimal tolerance (s_e={res.s_e}, s_w={res.s_w}), "
       f"load D={res.D:.0f}, expected iteration {res.T_tol:.0f} ms")
 print(f"  Theorem 3 gap bound: "
       f"{jncss.theorem3_gap_bound(params, res, n_samples=500):.0f} ms")
+
+# ---- 5. the whole system as one object ---------------------------------
+# CodedCluster (topology + runtime model + detector) + CodedSession
+# (planner, compiled steps, elastic replan loop, checkpoints):
+cluster = CodedCluster.hetero(n_edges=2, n_workers=4)
+session = CodedSession(cluster, get_smoke_config("llama3-8b"),
+                       planner="jncss", total_steps=4, seq_len=16,
+                       log_every=2)
+session.fit()
+print(f"coded training over {cluster!r}: "
+      f"final loss {session.losses[-1]:.4f}")

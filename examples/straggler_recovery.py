@@ -1,14 +1,12 @@
 """Fault-tolerance demo: per-iteration straggler decode, checkpoint /
-restart, and elastic replanning after a PERSISTENT edge failure.
+restart, and elastic replanning after a PERSISTENT edge failure — all
+through the public `repro.api` surface.
 
 Run:  PYTHONPATH=src python examples/straggler_recovery.py
 """
 import numpy as np
 
-from repro.core.hgc import HGCCode
-from repro.core.runtime_model import ClusterParams
-from repro.core.topology import Tolerance, Topology
-from repro.dist.elastic import replan, shrink_topology
+from repro.api import ClusterParams, CodedCluster, Topology, replan
 
 # ---- a heterogeneous 4-edge × 4-worker cluster --------------------------
 # (JNCSS only pays for coding redundancy when nodes differ — Algorithm 2
@@ -26,7 +24,8 @@ params = ClusterParams(
     tau_e=np.array([100.0, 100.0, 100.0, 500.0]),  # one weak edge
     p_e=np.array([0.1, 0.1, 0.1, 0.3]),
 )
-plan = replan(params, K=16)
+cluster = CodedCluster(params)
+plan = replan(cluster.params, K=16)
 code = plan.code
 print(f"initial plan: (s_e={code.tol.s_e}, s_w={code.tol.s_w}), "
       f"K={code.K}, D={code.load}, T̂={plan.expected_iteration_ms:.0f} ms")
@@ -45,10 +44,10 @@ else:
           "(coding redundancy not worth it at these delays)")
 
 # ---- 2. persistent failure: shrink + replan + resume --------------------
-dead = [3]
-surviving = shrink_topology(params, dead_edges=dead)
-print(f"\nedge 3 died permanently → surviving topology {surviving.topo.m}")
-new_plan = replan(surviving, K=16)
+surviving = cluster.shrink(dead_edges=[3])
+print(f"\nedge 3 died permanently → surviving topology "
+      f"{surviving.topo.m} (record: dead_edges={list(surviving.dead_edges)})")
+new_plan = replan(surviving.params, K=16)
 print(f"replanned: (s_e={new_plan.tol.s_e}, s_w={new_plan.tol.s_w}), "
       f"K={new_plan.K}, D={new_plan.code.load}, "
       f"T̂={new_plan.expected_iteration_ms:.0f} ms")
@@ -57,4 +56,5 @@ out = new_plan.code.simulate_iteration(g2[: new_plan.K])
 print(f"post-replan decode error "
       f"{np.max(np.abs(out - g2[: new_plan.K].sum(0))):.2e}")
 print("\nmodel/optimizer state is topology-independent — a checkpoint "
-      "restore (repro.checkpoint) completes the recovery.")
+      "restore completes the recovery (CodedSession does the whole "
+      "sequence in-loop: session.shrink(dead_edges=[3]); session.fit()).")

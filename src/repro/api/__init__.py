@@ -1,0 +1,71 @@
+"""`repro.api` — the public object model of the coded system.
+
+One import surface for everything a user script needs:
+
+  * :class:`CodedCluster` — topology + runtime model + straggler
+    detector (``homogeneous`` / ``hetero`` / ``from_observations``),
+  * :class:`Plan` + the pluggable :class:`Planner` strategies
+    (``jncss`` | ``fixed`` | ``uniform``) — cluster model → deployed
+    HGC code + λ provider,
+  * :class:`CodedSession` — mesh, sharded state, compiled
+    train/eval/generate steps, elastic replan loop, checkpoints
+    (``session.fit()``, ``session.step()``, ``session.generate()``),
+  * re-exports of the stable core/dist/sim vocabulary (``Topology``,
+    ``HGCCode``, ``replan``, ``simulate_training``, …) so examples and
+    user code import ONLY ``repro.api`` (plus configs/data).
+
+``repro.api.aot`` (lower/compile/roofline analysis) and
+``repro.api.serving`` (prefill/decode builders) are importable
+submodules — not pulled in eagerly, they carry the heavier deps.
+"""
+from repro.core import jncss, tradeoff
+from repro.core.hgc import HGCCode
+from repro.core.runtime_model import ClusterParams, paper_cluster
+from repro.core.topology import Tolerance, Topology
+from repro.dist.elastic import (
+    Plan,
+    StragglerDetector,
+    price_tolerance,
+    replan,
+    shrink_topology,
+)
+from repro.sim.simulator import simulate_training
+
+from repro.api.cluster import CodedCluster, sample_straggler_pattern
+from repro.api.planner import (
+    FixedPlanner,
+    JNCSSPlanner,
+    Planner,
+    UniformPlanner,
+    get_planner,
+    planner_for_scheme,
+)
+from repro.api.session import CodedSession, build_coded_batch
+
+__all__ = [
+    # the object model
+    "CodedCluster",
+    "CodedSession",
+    "Plan",
+    "Planner",
+    "JNCSSPlanner",
+    "FixedPlanner",
+    "UniformPlanner",
+    "get_planner",
+    "planner_for_scheme",
+    "build_coded_batch",
+    "sample_straggler_pattern",
+    # stable re-exported vocabulary
+    "Topology",
+    "Tolerance",
+    "HGCCode",
+    "ClusterParams",
+    "paper_cluster",
+    "StragglerDetector",
+    "replan",
+    "shrink_topology",
+    "price_tolerance",
+    "simulate_training",
+    "jncss",
+    "tradeoff",
+]

@@ -1,0 +1,153 @@
+"""Pluggable planning strategies: cluster model → deployed ``Plan``.
+
+The seam the ROADMAP's scenario family plugs into: a ``Planner`` turns
+a :class:`~repro.core.runtime_model.ClusterParams` into a
+:class:`~repro.dist.elastic.Plan` (tolerance + built HGC code + λ
+provider).  Three built-ins:
+
+  * ``jncss``   — the paper's Algorithm 2 grid search (adaptive: the
+    session re-invokes it on detector-updated params at replan time),
+  * ``fixed``   — a pinned (s_e, s_w) tolerance,
+  * ``uniform`` — uncoded baseline, tolerance (0, 0).
+
+Heterogeneity-aware planning (Wang et al. 2019) or the communication–
+computation trade-off family (Gholami et al. 2025) drop in as further
+strategies: implement ``plan()`` and hand the instance to
+``CodedSession(planner=...)`` — no driver fork required.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.core import tradeoff
+from repro.core.hgc import HGCCode
+from repro.core.runtime_model import ClusterParams
+from repro.core.topology import Tolerance, Topology
+from repro.dist.elastic import Plan, price_tolerance, replan
+
+
+@runtime_checkable
+class Planner(Protocol):
+    """Strategy protocol: price tolerances, build the deployed code."""
+
+    def initial_K(self, topo: Topology) -> int:
+        """Target part count before construction-compatibility bumping."""
+        ...
+
+    def plan(self, params: ClusterParams, K: int, *, seed: int = 0,
+             reuse: Optional[HGCCode] = None) -> Plan:
+        """Plan a tolerance for ``params`` and build/reuse its code.
+
+        ``reuse`` is the currently deployed code: when the strategy
+        lands on the same (tolerance, K, topology) it MUST be returned
+        as-is (identity, not equality) so the caller's part streams and
+        compiled step stay valid with zero churn.
+        """
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class JNCSSPlanner:
+    """The paper's Algorithm 2: expected-iteration-time grid search.
+
+    ``s_e_hint``/``s_w_hint`` only size the initial K request (the
+    search itself picks the tolerance).
+    """
+
+    s_e_hint: int = 1
+    s_w_hint: int = 1
+    construction: str = "random"
+
+    def initial_K(self, topo: Topology) -> int:
+        return tradeoff.compatible_K(
+            topo, Tolerance(self.s_e_hint, self.s_w_hint),
+            at_least=topo.total_workers,
+        )
+
+    def plan(self, params: ClusterParams, K: int, *, seed: int = 0,
+             reuse: Optional[HGCCode] = None) -> Plan:
+        return replan(params, K, seed=seed,
+                      construction=self.construction, reuse=reuse)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPlanner:
+    """A pinned tolerance: deploy (s_e, s_w) regardless of the cluster.
+
+    The tolerance is clamped to what the topology can carry (at least
+    one surviving edge / worker per edge) — a fixed-tolerance run that
+    shrinks past a permanent failure keeps planning instead of dying.
+    """
+
+    s_e: int = 1
+    s_w: int = 1
+    construction: str = "random"
+
+    @property
+    def tol(self) -> Tolerance:
+        return Tolerance(self.s_e, self.s_w)
+
+    def _clamped(self, topo: Topology) -> Tolerance:
+        return Tolerance(
+            max(min(self.s_e, topo.n - 1), 0),
+            max(min(self.s_w, min(topo.m) - 1), 0),
+        )
+
+    def initial_K(self, topo: Topology) -> int:
+        return tradeoff.compatible_K(
+            topo, self._clamped(topo), at_least=topo.total_workers
+        )
+
+    def plan(self, params: ClusterParams, K: int, *, seed: int = 0,
+             reuse: Optional[HGCCode] = None) -> Plan:
+        tol = self._clamped(params.topo)
+        K_c = tradeoff.compatible_K(params.topo, tol, at_least=K)
+        if (reuse is not None and reuse.tol == tol and reuse.K == K_c
+                and reuse.topo == params.topo):
+            code = reuse
+        else:
+            code = HGCCode.build(params.topo, tol, K=K_c, seed=seed,
+                                 construction=self.construction)
+        return Plan(
+            code=code, tol=tol, K=K_c,
+            expected_iteration_ms=price_tolerance(params, tol, code.load),
+            jncss=None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformPlanner(FixedPlanner):
+    """Uncoded baseline: no redundancy, wait for everyone."""
+
+    s_e: int = 0
+    s_w: int = 0
+
+
+def get_planner(spec, s_e: int = 1, s_w: int = 1) -> Planner:
+    """Resolve a planner: an instance passes through; a string picks a
+    built-in strategy (``"jncss"`` | ``"fixed"`` | ``"uniform"``)."""
+    if isinstance(spec, str):
+        if spec == "jncss":
+            return JNCSSPlanner(s_e_hint=s_e, s_w_hint=s_w)
+        if spec == "fixed":
+            return FixedPlanner(s_e, s_w)
+        if spec == "uniform":
+            return UniformPlanner()
+        raise ValueError(
+            f"unknown planner {spec!r} (expected jncss | fixed | uniform "
+            f"or a Planner instance)"
+        )
+    if not isinstance(spec, Planner):
+        raise TypeError(f"not a Planner: {spec!r}")
+    return spec
+
+
+def planner_for_scheme(scheme: str, s_e: int = 1, s_w: int = 1) -> Planner:
+    """The train CLI's ``--scheme`` names → planner strategies."""
+    return get_planner(
+        {"hgc_jncss": "jncss", "hgc": "fixed", "uncoded": "uniform"}.get(
+            scheme, scheme
+        ),
+        s_e, s_w,
+    )

@@ -1,0 +1,721 @@
+"""`CodedSession` — the deployed coded system as one object.
+
+The paper's system is a hierarchical cluster with a deployed code, a
+runtime model and an elastic replanning loop; this class owns all of it:
+the device mesh and sharded training state, the compiled train / eval /
+prefill / decode steps, the per-part data streams, the straggler
+simulation + detector feedback, JNCSS replanning, permanent-failure
+shrinking, and the checkpoint round trip (bit-for-bit kill/resume).
+
+The three aggregation policies of the train CLI map to ``mode``:
+
+  * ``"off"``        — single-host reference: λ rides the per-example
+    batch weights and the jit gradient reduction decodes implicitly,
+  * ``"coded"``      — (pod, data[, model]) mesh, two-stage coded
+    shard_map decode with λ as a runtime operand (zero recompiles
+    across straggler drops and replans),
+  * ``"coded_int8"`` — same, with the blockwise-int8 + error-feedback
+    edge→master hop (per-pod EF residuals ride the training state).
+
+Quickstart::
+
+    from repro.api import CodedCluster, CodedSession
+    from repro.configs.registry import get_smoke_config
+
+    cluster = CodedCluster.hetero(n_edges=2, n_workers=4)
+    session = CodedSession(cluster, get_smoke_config("llama3-8b"),
+                           planner="jncss", total_steps=20)
+    session.fit()
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import serving
+from repro.api.cluster import CodedCluster, sample_straggler_pattern
+from repro.api.planner import Planner, get_planner
+from repro.checkpoint.store import CheckpointStore, config_hash
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.hgc import HGCCode
+from repro.core.topology import Tolerance
+from repro.dist.elastic import Plan, price_tolerance
+from repro.data.pipeline import TokenStream
+from repro.models import transformer as tf
+from repro.optim import make_optimizer
+
+PyTree = Any
+
+
+def _step_rng(seed: int, step: int) -> np.random.Generator:
+    """Per-step straggler RNG: resume replays the exact pattern sequence
+    (bit-for-bit kill/resume needs history-independent sampling)."""
+    return np.random.default_rng(np.random.SeedSequence([seed, 7919, step]))
+
+
+def build_coded_batch(code: HGCCode, streams, fast_e, fast_w, seq_len,
+                      with_lam: bool = True):
+    """Global batch = all workers' assigned-part examples.
+
+    ``with_lam=True`` (single-host path): weights carry coeff × λ so the
+    jit gradient reduction decodes implicitly; straggling workers get
+    weight 0 (their rows still flow through the step fn — shapes are
+    static, only weights change).  ``with_lam=False`` (``--dist``
+    paths): weights carry the coding coefficients only — λ is applied
+    inside the shard_map decode, per shard group.  Example order is
+    (pod, data)-major either way, so sharding the batch dim over
+    ("pod", "data") hands worker (i, j) exactly its own examples.
+    """
+    lam = code.collapsed_weights(fast_e, fast_w) if with_lam else None
+    tokens, targets, weights = [], [], []
+    topo = code.topo
+    for i in range(topo.n):
+        for j in range(topo.m[i]):
+            w_idx = topo.flat_index(i, j)
+            coeff = code.worker_coeffs(i, j)
+            for k in code.assignment.worker_parts(i, j):
+                b = streams[k].next_batch()
+                tokens.append(b["tokens"])
+                targets.append(b["targets"])
+                w = b["weights"] * float(coeff[k])
+                if lam is not None:
+                    w = w * float(lam[w_idx])
+                weights.append(w)
+    return {
+        "tokens": np.concatenate(tokens, 0),
+        "targets": np.concatenate(targets, 0),
+        "weights": np.concatenate(weights, 0),
+        # fixed normalizer keeps the loss linear in the weights (exact
+        # coded decode); K parts × per-part token count
+        "denom": np.float32(
+            code.K * tokens[0].shape[0] * seq_len
+        ),
+    }
+
+
+def _extend_streams(streams, K: int, vocab: int, part_batch: int,
+                    seq_len: int, seed: int):
+    """K growth (replan / restored checkpoint) REUSES the existing part
+    streams — only the new parts get fresh resumable streams."""
+    while len(streams) < K:
+        streams.append(
+            TokenStream(vocab, part_batch, seq_len,
+                        seed=seed * 1000 + len(streams))
+        )
+
+
+class CodedSession:
+    """One coded train/serve session over a :class:`CodedCluster`.
+
+    ``cluster=None`` builds a serve-only session (no planning, no data
+    streams, no train step) — the serving driver's mode.
+    """
+
+    def __init__(
+        self,
+        cluster: Optional[CodedCluster],
+        cfg: ModelConfig,
+        *,
+        planner: Any = "jncss",
+        mode: str = "off",
+        tp: int = 1,
+        seq_len: int = 64,
+        part_batch: int = 1,
+        K: int = 0,
+        optimizer: str = "adamw",
+        lr: float = 1e-2,
+        total_steps: int = 100,
+        warmup_steps: Optional[int] = None,
+        grad_clip: float = 1.0,
+        grad_block: int = 64,
+        seed: int = 0,
+        scheme: Optional[str] = None,
+        checkpoint_dir: str = "",
+        checkpoint_every: int = 25,
+        keep_checkpoints: int = 3,
+        resume: bool = False,
+        log_every: int = 10,
+        verbose: bool = True,
+    ):
+        if mode not in ("off", "coded", "coded_int8"):
+            raise ValueError(f"unknown session mode {mode!r}")
+        self.cluster = cluster
+        self.cfg = cfg
+        self.mode = mode
+        self.tp = max(int(tp), 1)
+        self.seq_len = seq_len
+        self.part_batch = part_batch
+        self.seed = seed
+        self.log_every = log_every
+        self.verbose = verbose
+        self.losses: List[float] = []
+        self._serve_cache: Dict = {}
+        self._eval_fn = None
+
+        # model state (shared by train and serve paths)
+        rng = jax.random.PRNGKey(seed)
+        self.params = tf.init_params(rng, cfg)
+
+        if cluster is None:  # serve-only session: no optimizer, no plan
+            self.plan = None
+            self.code = None
+            self.tcfg = None
+            self._optimizer = None
+            self.opt_state = None
+            self.store = None
+            self._step = 0
+            self._mesh = None
+            return
+        self._optimizer = make_optimizer(optimizer)
+
+        # ---- plan the code ------------------------------------------
+        self.planner: Planner = get_planner(planner)
+        topo = cluster.topo
+        K_target = K or self.planner.initial_K(topo)
+        self.plan = self.planner.plan(cluster.params, K_target, seed=seed)
+        self.code = self.plan.code
+        self.scheme = scheme or (
+            "hgc_jncss" if self.plan.jncss is not None else "hgc"
+        )
+        if self.verbose:
+            if self.plan.jncss is not None:
+                print(f"[train] JNCSS chose (s_e={self.code.tol.s_e}, "
+                      f"s_w={self.code.tol.s_w}), D={self.code.load}, "
+                      f"K={self.code.K}, "
+                      f"T̂={self.plan.expected_iteration_ms:.0f} ms")
+            else:
+                print(f"[train] fixed scheme {self.scheme}: "
+                      f"(s_e={self.code.tol.s_e}, "
+                      f"s_w={self.code.tol.s_w}), D={self.code.load}, "
+                      f"K={self.code.K}")
+
+        self.tcfg = TrainConfig(
+            optimizer=optimizer, lr=lr, total_steps=total_steps,
+            warmup_steps=(warmup_steps if warmup_steps is not None
+                          else max(total_steps // 10, 1)),
+            grad_clip=grad_clip,
+            scheme=self.scheme, s_e=self.code.tol.s_e,
+            s_w=self.code.tol.s_w, K=self.code.K,
+            dist_mode=mode,
+            grad_compression="int8" if mode == "coded_int8" else "none",
+            grad_compression_block=grad_block,
+        )
+
+        # ---- data: one resumable stream per dataset part -------------
+        self.streams: List[TokenStream] = []
+        _extend_streams(self.streams, self.code.K, cfg.vocab, part_batch,
+                        seq_len, seed)
+
+        # ---- init / resume -------------------------------------------
+        self.opt_state = self._optimizer.init(self.params)
+        self._step = 0
+        self.store = None
+        self._restored_extra: Dict = {}
+        if checkpoint_dir:
+            # hash the MODEL config only: run hyperparameters
+            # (total_steps, lr schedule) legitimately change across
+            # restarts
+            self.store = CheckpointStore(
+                checkpoint_dir, keep=keep_checkpoints,
+                cfg_hash=config_hash(cfg),
+            )
+            if resume and self.store.latest_step() is not None:
+                self._resume()
+        self.checkpoint_every = checkpoint_every
+
+        self._setup_train_step()
+
+    # ------------------------------------------------------------------
+    # restore
+    # ------------------------------------------------------------------
+    def _resume(self):
+        start, state, extra = self.store.restore()
+        self._restored_extra = extra
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        if "opt_state" in state:
+            # stateless optimizers (sgd) flatten to an empty subtree —
+            # the freshly initialized opt_state is already correct then
+            self.opt_state = jax.tree.map(jnp.asarray,
+                                          state["opt_state"])
+        cl = extra.get("cluster")
+        if cl and (cl.get("dead_edges") or cl.get("dead_workers")):
+            # the run had shrunk past permanent failures before the
+            # kill — rebuild the surviving cluster from the base model
+            self.cluster = self.cluster.restored(cl)
+            if self.verbose:
+                print(f"[train] restored shrunk topology "
+                      f"m={self.cluster.topo.m}")
+        ck = extra.get("code")
+        if ck and (
+            (ck["s_e"], ck["s_w"], ck["K"]) !=
+            (self.code.tol.s_e, self.code.tol.s_w, self.code.K)
+            or self.code.topo != self.cluster.topo
+        ):
+            # the run had replanned before the kill — rebuild the
+            # deployed code deterministically (same seed ⇒ same code)
+            self.code = HGCCode.build(
+                self.cluster.topo, Tolerance(ck["s_e"], ck["s_w"]),
+                K=ck["K"], seed=self.seed,
+                construction=getattr(self.planner, "construction",
+                                     "random"),
+            )
+            # keep the plan (the public λ provider) in lockstep with
+            # the actually deployed code
+            self.plan = Plan(
+                code=self.code, tol=self.code.tol, K=self.code.K,
+                expected_iteration_ms=price_tolerance(
+                    self.cluster.params, self.code.tol, self.code.load
+                ),
+                jncss=None,
+            )
+            if self.verbose:
+                print(f"[train] restored replanned code "
+                      f"(s_e={ck['s_e']}, s_w={ck['s_w']}, K={ck['K']})")
+        saved_streams = extra["streams"]
+        # the saved list may exceed code.K (a replan once grew K and
+        # later shrank it — streams are never discarded)
+        _extend_streams(self.streams,
+                        max(self.code.K, len(saved_streams)),
+                        self.cfg.vocab, self.part_batch, self.seq_len,
+                        self.seed)
+        for k, sd in enumerate(saved_streams):
+            self.streams[k].load_state_dict(sd)
+        if "detector" in extra:
+            self.cluster.detector.load_state_dict(extra["detector"])
+        self._step = start
+        if self.verbose:
+            print(f"[train] resumed from step {start}")
+
+    # ------------------------------------------------------------------
+    # step compilation (mesh, shardings, λ / EF residuals)
+    # ------------------------------------------------------------------
+    def _setup_train_step(self):
+        """Jit the train step; in the dist modes build the mesh, shard
+        the state onto it and PIN the output shardings — outputs land in
+        exactly the input layouts, so step 2 reuses step 1's executable
+        (the zero-recompile invariant)."""
+        from repro.launch import steps as steps_lib
+
+        topo = self.cluster.topo
+        # a rebuild after shrink() carries the surviving pods' EF
+        # residual rows through; the first build starts empty
+        carry_residual = getattr(self, "residual", {}) or {}
+        self.residual: Dict = {}
+        self._batch_sh = self._lam_sh = None
+        if self.mode == "off":
+            self._mesh = None
+            if self.tp > 1:
+                raise ValueError(
+                    "tp > 1 requires a dist mode (the single-host "
+                    "reference loop has no model mesh axis)"
+                )
+            self.train_step = jax.jit(
+                steps_lib.make_train_step(self.cfg, self.tcfg,
+                                          optimizer=self._optimizer)
+            )
+            return
+
+        if len(set(topo.m)) != 1:
+            raise ValueError(
+                f"dist modes need a uniform topology for the "
+                f"(pod, data) mesh, got m={topo.m}"
+            )
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.dist import compression as comp_lib
+        from repro.dist import grad_sync
+        from repro.dist import sharding as shard_lib
+        from repro.dist.mesh import make_test_mesh
+
+        self._grad_sync = grad_sync
+        pods, data = topo.n, topo.m[0]
+        shard_lib.validate_tp(self.cfg, self.tp)
+        mesh = self._mesh = make_test_mesh(pods, data, self.tp)
+        if self.verbose:
+            print(f"[train] dist={self.mode}: mesh "
+                  f"(pod={pods} × data={data} × "
+                  f"model={self.tp}), "
+                  f"grad_compression={self.tcfg.grad_compression}"
+                  + (f", TP degree {self.tp}" if self.tp > 1 else ""))
+
+        param_sh, opt_sh = shard_lib.state_shardings(
+            self.params, self.opt_state, self.cfg, mesh,
+            fsdp=self.tcfg.fsdp, head_aligned=True,
+        )
+        self.params = jax.device_put(self.params, param_sh)
+        self.opt_state = jax.device_put(self.opt_state, opt_sh)
+        dp = ("pod", "data")
+        self._batch_sh = {
+            "tokens": NamedSharding(mesh, P(dp, None)),
+            "targets": NamedSharding(mesh, P(dp, None)),
+            "weights": NamedSharding(mesh, P(dp, None)),
+            "denom": NamedSharding(mesh, P()),
+        }
+        self._lam_sh = NamedSharding(mesh, P("pod", "data"))
+        res_sh: Dict = {}
+        if self.tcfg.grad_compression == "int8":
+            if carry_residual:
+                self.residual = jax.tree.map(jnp.asarray, carry_residual)
+            elif "ef_residual" in self._restored_extra:
+                # consume the checkpoint payload: a later mesh rebuild
+                # must carry the LIVE residual, not roll back to this
+                self.residual = jax.tree.map(
+                    jnp.asarray, self._restored_extra.pop("ef_residual")
+                )
+            else:
+                self.residual = comp_lib.init_pod_residuals(
+                    self.params, pods
+                )
+            # under TP the residual follows its gradient leaf onto the
+            # model axis (same pspec rules as the step's shard_map)
+            res_sh = shard_lib.to_shardings(
+                shard_lib.residual_pspecs(self.params, self.cfg, mesh,
+                                          fsdp=self.tcfg.fsdp),
+                mesh,
+            )
+            self.residual = jax.device_put(self.residual, res_sh)
+        self.train_step = jax.jit(
+            steps_lib._make_dist_train_step(self.cfg, self.tcfg, mesh,
+                                            optimizer=self._optimizer),
+            out_shardings=(param_sh, opt_sh, res_sh,
+                           NamedSharding(mesh, P())),
+        )
+
+    # ------------------------------------------------------------------
+    # training
+    # ------------------------------------------------------------------
+    def build_batch(self, fast_e, fast_w):
+        """The coded global batch for one observed straggler pattern."""
+        return build_coded_batch(
+            self.code, self.streams, fast_e, fast_w, self.seq_len,
+            with_lam=(self._mesh is None),
+        )
+
+    def _iteration(self, step: int, force_drop_edge: int = -1,
+                   force_drop_step: int = -1, batch=None) -> Dict:
+        code, topo = self.code, self.cluster.topo
+        fast_e, fast_w, t_iter, wt = sample_straggler_pattern(
+            _step_rng(self.seed, step), code, self.cluster.params,
+            code.load,
+        )
+        if step == force_drop_step and \
+                0 <= force_drop_edge < topo.n and code.tol.s_e > 0:
+            # forced straggler drop: exercise the zero-recompile claim —
+            # only the λ operand changes, never the compiled step
+            fast_e = tuple(
+                i for i in range(topo.n) if i != force_drop_edge
+            )[: topo.n - code.tol.s_e]
+        self.cluster.observe(wt)
+        if batch is None:
+            batch = self.build_batch(fast_e, fast_w)
+        if self._mesh is None:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch, jnp.asarray(step)
+            )
+        else:
+            batch = {
+                k: jax.device_put(jnp.asarray(v), self._batch_sh[k])
+                for k, v in batch.items()
+            }
+            lam_arr = jax.device_put(
+                jnp.asarray(self._grad_sync.lam_array_from_code(
+                    code, fast_e, fast_w, topo.n, topo.m[0]
+                )),
+                self._lam_sh,
+            )
+            (self.params, self.opt_state, self.residual,
+             metrics) = self.train_step(
+                self.params, self.opt_state, batch, lam_arr,
+                self.residual, jnp.asarray(step),
+            )
+        self.losses.append(float(metrics["loss"]))
+        self._step = step + 1
+        metrics = dict(metrics)
+        metrics["sim_iter_ms"] = t_iter
+        metrics["fast_edges"] = fast_e
+        return metrics
+
+    def step(self, batch=None) -> Dict:
+        """One training iteration at the session's current step index.
+
+        Samples a straggler pattern from the cluster model, feeds the
+        detector, and runs the compiled step.  ``batch`` overrides the
+        coded batch built from the session's part streams — it must be
+        in the coded layout of :func:`build_coded_batch`.
+        """
+        if self.cluster is None:
+            raise RuntimeError("serve-only session (cluster=None) "
+                               "cannot train")
+        return self._iteration(self._step, batch=batch)
+
+    def fit(
+        self,
+        steps: Optional[int] = None,
+        *,
+        replan_every: int = 0,
+        force_drop_edge: int = -1,
+        force_drop_step: int = -1,
+        stop_after: int = 0,
+    ) -> Dict:
+        """The managed loop: straggler simulation → coded step →
+        detector feedback → elastic replan → checkpoint.
+
+        ``steps`` is the GLOBAL target step (defaults to the LR
+        schedule's ``total_steps``); a resumed session continues from
+        its restored step.  ``stop_after`` simulates a kill: exit
+        cleanly after N total steps without touching the LR schedule.
+        Returns the metrics report (per-step losses + jit cache stats).
+        """
+        if self.cluster is None:
+            raise RuntimeError("serve-only session (cluster=None) "
+                               "cannot train")
+        total = steps if steps is not None else self.tcfg.total_steps
+        start = self._step
+        t0 = time.time()
+        sim_ms = 0.0
+        steps_done = 0
+        for step in range(start, total):
+            steps_done += 1
+            m = self._iteration(step, force_drop_edge, force_drop_step)
+            sim_ms += m["sim_iter_ms"]
+            if self.verbose and (
+                    step % self.log_every == 0 or step == total - 1):
+                topo = self.cluster.topo
+                drop = sorted(set(range(topo.n)) - set(m["fast_edges"]))
+                print(f"[train] step {step:5d} loss {self.losses[-1]:.4f} "
+                      f"grad_norm {float(m['grad_norm']):.3f} "
+                      f"sim_iter {m['sim_iter_ms']:.0f} ms "
+                      f"stragglers: edges={drop}")
+            if replan_every and (step + 1) % replan_every == 0:
+                self.replan()
+            # checkpoint AFTER a possible replan so the saved
+            # (tolerance, K) is what the surviving run would train with
+            if self.store and (step + 1) % self.checkpoint_every == 0:
+                self.save_checkpoint(step + 1)
+            if stop_after and step + 1 >= stop_after:
+                if self.verbose:
+                    print(f"[train] stopping after step {step} "
+                          f"(simulated kill)")
+                break
+        cache_entries = self.jit_cache_entries()
+        if self.verbose:
+            wall = time.time() - t0
+            print(f"[train] done: {steps_done} steps in {wall:.1f}s "
+                  f"wall, {sim_ms/1e3:.1f}s simulated cluster time, "
+                  f"jit cache entries: {cache_entries}")
+        return self.report(first_step=start)
+
+    def replan(self):
+        """Re-run the planner on the detector-updated cluster model;
+        a stable plan reuses the deployed code and part streams."""
+        plan = self.planner.plan(
+            self.cluster.updated_params(self.code.load), self.code.K,
+            seed=self.seed, reuse=self.code,
+        )
+        if plan.code is not self.code:
+            if self.verbose:
+                print(f"[train] replan: tolerance → "
+                      f"(s_e={plan.tol.s_e}, s_w={plan.tol.s_w}), "
+                      f"K={plan.K}, "
+                      f"T̂={plan.expected_iteration_ms:.0f} ms")
+            self.plan = plan
+            self.code = plan.code
+            # the compatible K for the new tolerance may exceed the old
+            # one — existing part streams are reused, only the new
+            # parts get streams
+            _extend_streams(self.streams, self.code.K, self.cfg.vocab,
+                            self.part_batch, self.seq_len, self.seed)
+        return self.plan
+
+    def shrink(self, dead_edges=(), dead_workers=()):
+        """Drop PERMANENTLY failed nodes, replan, and keep training.
+
+        Transient stragglers need no action (the code tolerates them by
+        construction); a permanent failure shrinks the cluster model,
+        re-plans the tolerance on the survivors, and — in the dist
+        modes — rebuilds the mesh and re-shards the (topology-
+        independent) model state onto it.  One legitimate recompile;
+        the shrink record rides checkpoints, so kill/resume replays the
+        surviving cluster exactly.
+        """
+        old_topo = self.cluster.topo
+        keep = [i for i in range(old_topo.n) if i not in set(dead_edges)]
+        self.cluster = self.cluster.shrink(dead_edges, dead_workers)
+        self.plan = self.planner.plan(
+            self.cluster.params, self.code.K, seed=self.seed,
+        )
+        self.code = self.plan.code
+        _extend_streams(self.streams, self.code.K, self.cfg.vocab,
+                        self.part_batch, self.seq_len, self.seed)
+        if self.verbose:
+            print(f"[train] shrink: topology → m={self.cluster.topo.m}, "
+                  f"(s_e={self.code.tol.s_e}, s_w={self.code.tol.s_w}), "
+                  f"K={self.code.K}")
+        if self._mesh is not None:
+            # surviving pods keep their own EF residual rows
+            if self.residual:
+                idx = np.asarray(keep, np.intp)
+                self.residual = jax.tree.map(
+                    lambda r: np.asarray(r)[idx], self.residual
+                )
+            self.params = jax.tree.map(np.asarray, self.params)
+            self.opt_state = jax.tree.map(np.asarray, self.opt_state)
+            self._setup_train_step()
+        return self.plan
+
+    # ------------------------------------------------------------------
+    # checkpointing / reporting
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, step: Optional[int] = None) -> str:
+        if self.store is None:
+            raise RuntimeError("session has no checkpoint_dir")
+        # detector rides the top-level key only (the cluster snapshot
+        # would duplicate it — one source of truth)
+        cluster_state = self.cluster.state_dict()
+        cluster_state.pop("detector", None)
+        extra = {
+            "streams": [s.state_dict() for s in self.streams],
+            "detector": self.cluster.detector.state_dict(),
+            "code": {"s_e": self.code.tol.s_e, "s_w": self.code.tol.s_w,
+                     "K": self.code.K},
+            "cluster": cluster_state,
+        }
+        if self.tcfg.grad_compression == "int8" and self._mesh is not None:
+            extra["ef_residual"] = self.residual
+        return self.store.save(
+            self._step if step is None else step,
+            {"params": self.params, "opt_state": self.opt_state},
+            extra=extra,
+        )
+
+    def jit_cache_entries(self) -> int:
+        """Compiled-executable count of the train step (-1: unavailable
+        on this jax).  1 after a run == the zero-recompile invariant."""
+        size_fn = getattr(self.train_step, "_cache_size", None)
+        if callable(size_fn):
+            return int(size_fn())
+        return -1
+
+    def report(self, first_step: int = 0) -> Dict:
+        """The metrics payload the train CLI writes to --metrics-out."""
+        return {
+            "dist": self.mode,
+            "first_step": first_step,
+            "losses": self.losses,
+            "jit_cache_entries": self.jit_cache_entries(),
+        }
+
+    # ------------------------------------------------------------------
+    # evaluation
+    # ------------------------------------------------------------------
+    def eval_step(self, batch) -> Dict[str, float]:
+        """Loss/metrics of one batch under the current params (no
+        update, no coding — plain replicated evaluation)."""
+        if self._eval_fn is None:
+            cfg = self.cfg
+
+            def eval_fn(params, batch):
+                _, m = tf.loss_and_metrics(params, cfg, batch)
+                return m
+
+            self._eval_fn = jax.jit(eval_fn)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return {k: float(v)
+                for k, v in self._eval_fn(self.params, batch).items()}
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def _serve_fns(self, max_len: int, exact: bool):
+        """Compiled (prefill, decode) pair; tensor-parallel when tp > 1.
+
+        tp > 1 builds a serving mesh and pins in/out shardings from the
+        SAME pspec rules training partitions from (`serve_shardings`) —
+        GSPMD then runs the Megatron TP plan; the function bodies are
+        the single-host ones, unchanged.
+        """
+        key = (max_len, exact, self.tp)
+        if key in self._serve_cache:
+            return self._serve_cache[key]
+        prefill_raw = serving.make_prefill_fn(
+            self.cfg, max_len, exact=exact
+        )
+        decode_raw = serving.make_decode_fn(self.cfg)
+        if self.tp <= 1:
+            entry = (jax.jit(prefill_raw), jax.jit(decode_raw), None)
+        else:
+            from repro.dist import sharding as shard_lib
+            from repro.dist.mesh import make_serve_mesh
+
+            shard_lib.validate_tp(self.cfg, self.tp)
+            mesh = make_serve_mesh(self.tp)
+            cache_abs = jax.eval_shape(
+                lambda: tf.init_cache(self.cfg, 1, max_len,
+                                      dtype="float32")
+            )
+            param_sh, cache_sh = shard_lib.serve_shardings(
+                self.params, cache_abs, self.cfg, mesh
+            )
+            n_in = 3 if self.cfg.is_encdec else 2
+            prefill = jax.jit(
+                prefill_raw,
+                in_shardings=(param_sh,) + (None,) * (n_in - 1),
+                out_shardings=(None, cache_sh),
+            )
+            decode = jax.jit(
+                decode_raw,
+                in_shardings=(param_sh, None, cache_sh),
+                out_shardings=(None, cache_sh),
+            )
+            entry = (prefill, decode, (mesh, param_sh))
+        self._serve_cache[key] = entry
+        return entry
+
+    def generate(
+        self,
+        prompts,
+        gen_len: int,
+        max_len: Optional[int] = None,
+        *,
+        enc_frames=None,
+        greedy: bool = True,
+        seed: int = 0,
+        exact_handoff: bool = False,
+    ) -> np.ndarray:
+        """Batched generation: bulk prefill → decode loop → (B, gen_len)
+        token array.  ``exact_handoff`` forces the token-by-token
+        prefill (debug path; also the automatic fallback for recurrent /
+        encoder-decoder archs whose states only exist on decode)."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        max_len = max_len or int(prompts.shape[1]) + gen_len + 1
+        prefill_fn, decode_fn, meshed = self._serve_fns(
+            max_len, exact_handoff
+        )
+        params = self.params
+        if meshed is not None:
+            from repro.dist.sharding import activation_sharding
+
+            mesh, param_sh = meshed
+            # shard the weights once per params version, not per call
+            cached = getattr(self, "_serve_params", None)
+            if cached is None or cached[0] is not self.params:
+                self._serve_params = (
+                    self.params, jax.device_put(self.params, param_sh)
+                )
+            params = self._serve_params[1]
+            with mesh, activation_sharding(mesh):
+                return serving.generate_tokens(
+                    params, self.cfg, prompts, gen_len,
+                    prefill_fn=prefill_fn, decode_fn=decode_fn,
+                    enc_frames=enc_frames, greedy=greedy, seed=seed,
+                )
+        return serving.generate_tokens(
+            params, self.cfg, prompts, gen_len,
+            prefill_fn=prefill_fn, decode_fn=decode_fn,
+            enc_frames=enc_frames, greedy=greedy, seed=seed,
+        )

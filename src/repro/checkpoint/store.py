@@ -29,6 +29,14 @@ import numpy as np
 PyTree = Any
 _SEP = "/"
 
+#: On-disk layout version.  Bump whenever the checkpoint payload gains,
+#: loses or re-shapes a field (state tree structure, ``extra`` schema) —
+#: a stale checkpoint then fails with a clear message at restore time
+#: instead of a cryptic pytree-structure error deep in the training
+#: loop.  v2: elastic state in ``extra`` (streams, detector, deployed
+#: code, EF residuals, cluster shrink record).
+SCHEMA_VERSION = 2
+
 
 def _flatten(tree: PyTree, prefix: str = "") -> Dict[str, np.ndarray]:
     out = {}
@@ -126,6 +134,7 @@ class CheckpointStore:
         meta = {
             "step": step,
             "time": time.time(),
+            "schema_version": SCHEMA_VERSION,
             "cfg_hash": self.cfg_hash,
             "extra": json_extra,
             "n_arrays": len(flat),
@@ -172,6 +181,15 @@ class CheckpointStore:
         d = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
+        found = meta.get("schema_version", 1)
+        if found != SCHEMA_VERSION:
+            raise ValueError(
+                f"checkpoint {d} was written with schema v{found}, but "
+                f"this build reads v{SCHEMA_VERSION} — the stored "
+                f"state/extra layout is incompatible (fields were "
+                f"added/removed since).  Restore it with the matching "
+                f"release, or re-serialize it before resuming."
+            )
         if self.cfg_hash and meta["cfg_hash"] and \
                 meta["cfg_hash"] != self.cfg_hash:
             raise ValueError(

@@ -33,17 +33,66 @@ from repro.core.topology import Tolerance, Topology
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A replanning outcome: the new code + the JNCSS diagnostics."""
+    """A planning outcome: the deployed code + the planner diagnostics.
+
+    Produced by :func:`replan` (JNCSS) or by any ``repro.api.Planner``
+    strategy; ``jncss`` is ``None`` for fixed/uniform strategies.  The
+    plan is also the λ provider of the deployed code: :meth:`lam` /
+    :meth:`lam_array` turn an observed straggler pattern into the
+    runtime decode-weight operand the train step consumes.
+    """
 
     code: HGCCode
     tol: Tolerance
     K: int
     expected_iteration_ms: float
-    jncss: jncss_mod.JNCSSResult
+    jncss: Optional[jncss_mod.JNCSSResult] = None
 
     @property
     def load(self) -> int:
         return self.code.load
+
+    @property
+    def deployed(self) -> dict:
+        """The (tolerance, K) triple checkpoints persist."""
+        return {"s_e": self.tol.s_e, "s_w": self.tol.s_w, "K": self.K}
+
+    def lam(self, fast_edges, fast_workers) -> np.ndarray:
+        """Collapsed flat per-worker decode weights λ_ij (stragglers 0)."""
+        return self.code.collapsed_weights(fast_edges, fast_workers)
+
+    def lam_array(self, fast_edges, fast_workers) -> np.ndarray:
+        """λ_ij as the (pods, data) runtime operand of the dist step.
+
+        Requires a uniform topology (every edge the same worker count) —
+        exactly the shape the (pod, data) mesh can carry.
+        """
+        topo = self.code.topo
+        if len(set(topo.m)) != 1:
+            raise ValueError(
+                f"lam_array needs a uniform topology, got m={topo.m}"
+            )
+        # the one implementation of the λ→mesh mapping (jax-importing
+        # module, hence lazy — this module stays numpy-only)
+        from repro.dist.grad_sync import lam_array_from_code
+
+        return lam_array_from_code(
+            self.code, fast_edges, fast_workers, topo.n, topo.m[0]
+        )
+
+
+def price_tolerance(
+    params: ClusterParams, tol: Tolerance, load: float
+) -> float:
+    """Expected iteration time T̂ (ms) of a tolerance at a deployed load.
+
+    The JNCSS order-statistic expression (eq. 43 flavor) evaluated at
+    the load ``D`` the built code actually carries — shared by
+    :func:`replan` and the fixed-tolerance planner strategies so every
+    ``Plan`` prices consistently.
+    """
+    scores, _ = jncss_mod._edge_scores(params, float(load), tol.s_w)
+    return float(kth_min(scores, params.topo.n - tol.s_e))
 
 
 def replan(
@@ -81,8 +130,7 @@ def replan(
     # res.T_tol was evaluated at the REQUESTED K's load; re-price the
     # order-statistic expression at the load the built code actually
     # carries (K_c ≥ K bumps D proportionally).
-    scores, _ = jncss_mod._edge_scores(params, float(code.load), tol.s_w)
-    T_deployed = float(kth_min(scores, params.topo.n - tol.s_e))
+    T_deployed = price_tolerance(params, tol, code.load)
     return Plan(
         code=code,
         tol=tol,

@@ -22,3 +22,11 @@ def make_test_mesh(pods: int, data: int, model: int):
             f"{have}; set XLA_FLAGS=--xla_force_host_platform_device_count={need}"
         )
     return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+
+
+def make_serve_mesh(model: int, data: int = 1):
+    """Serving mesh: tensor-parallel "model" axis (+ optional batch
+    "data" axis), no pod layer — serving has no coded aggregation, but
+    it partitions from the SAME pspec rules as training (canonical axis
+    names, so ``dist.sharding`` applies unchanged)."""
+    return make_test_mesh(1, data, model)

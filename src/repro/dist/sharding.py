@@ -492,6 +492,28 @@ def residual_pspecs(params: PyTree, cfg, mesh: Mesh, *,
     )
 
 
+def serve_shardings(
+    params: PyTree,
+    cache: PyTree,
+    cfg,
+    mesh: Mesh,
+) -> Tuple[PyTree, PyTree]:
+    """Fitted NamedSharding trees for the serving path on ``mesh``.
+
+    Params follow the same Megatron TP rules as training but without
+    FSDP (decode is latency-bound — gathering shards per token would
+    dominate); the decode cache shards batch over (pod, data) and the
+    fused head dim over "model".  GSPMD partitions the decode/prefill
+    steps from these — the ShardCtx seam's inactive side, exactly how
+    the dryrun decode cells lower.
+    """
+    pspecs = fit_pspecs(
+        params_pspecs(params, cfg, mesh, fsdp=False), params, mesh
+    )
+    cspecs = fit_pspecs(cache_pspecs(cache, mesh), cache, mesh)
+    return to_shardings(pspecs, mesh), to_shardings(cspecs, mesh)
+
+
 def state_shardings(
     params: PyTree,
     opt_state: PyTree,

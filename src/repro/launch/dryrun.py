@@ -3,12 +3,14 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # The two lines above MUST run before any other import (jax locks the
 # device count at first init).  Do not move them.
 
-"""Multi-pod dry-run (assignment deliverable e).
+"""Multi-pod dry-run CLI (assignment deliverable e).
 
 For every (architecture × input shape × mesh) cell:
     lower → compile → memory_analysis / cost_analysis / collective bytes,
 on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh, using
-ShapeDtypeStruct inputs only (no allocation).
+ShapeDtypeStruct inputs only (no allocation).  The machinery lives in
+:mod:`repro.api.aot` (public); this module is the CLI + the env hook
+that forces the 512 host devices before jax initializes.
 
 Usage:
     python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
@@ -17,265 +19,10 @@ Usage:
 """
 import argparse
 import json
-import re
-import time
-import traceback
-from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.configs.base import SHAPES, TrainConfig
-from repro.configs.registry import ARCH_IDS, get_config, shape_applicable
-from repro.dist import sharding as sh
-from repro.launch import hlo_analysis
-from repro.launch.mesh import make_production_mesh
-from repro.launch import steps as steps_lib
-
-# TPU v5e hardware constants (assignment §ROOFLINE)
-PEAK_FLOPS = 197e12  # bf16 per chip
-HBM_BW = 819e9  # bytes/s
-LINK_BW = 50e9  # bytes/s per ICI link
-
-def _tree_bytes(tree) -> float:
-    return float(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
-
-
-def run_cell(
-    arch: str,
-    shape_name: str,
-    multi_pod: bool = False,
-    fsdp: bool = True,
-    microbatch: int = 32,
-    remat: bool = True,
-    flash: bool = False,
-    sharded_accum: bool = False,
-    kv_repeat: bool = False,
-    remat_policy: str = "full",
-    mode: str = "2d",
-    moe_ep_axis: str = "model",
-    verbose: bool = True,
-) -> Dict:
-    """Lower + compile one (arch × shape × mesh) cell; returns the record."""
-    import dataclasses as _dc
-
-    cfg = get_config(arch)
-    overrides = {}
-    if not remat:
-        overrides["remat"] = False
-    if flash:
-        overrides["flash"] = True
-    if remat_policy != "full":
-        overrides["remat_policy"] = remat_policy
-    if kv_repeat and cfg.n_kv_heads and cfg.n_heads >= 8:
-        # Head alignment to the TP degree (§Perf): replicate KV heads
-        # and zero-pad Q heads up to multiples of 16.  Misaligned heads
-        # (llama4: 40 q / 8 kv on a 16-way model axis) otherwise force
-        # GSPMD to shard head_dim and ALL-REDUCE the attention scores
-        # (S×T-sized!) every layer.  Zero-padded heads are functionally
-        # inert (wq=0 => uniform attn x wo=0 => no contribution).
-        overrides["n_kv_heads"] = 16
-        if cfg.n_heads % 16:
-            overrides["n_heads"] = -(-cfg.n_heads // 16) * 16
-    if overrides:
-        cfg = _dc.replace(cfg, **overrides)
-    shape = SHAPES[shape_name]
-    ok, why = shape_applicable(cfg, shape)
-    if not ok:
-        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-                "status": "skipped", "reason": why}
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    tcfg = TrainConfig(microbatch=microbatch)
-    t0 = time.time()
-    rec = {
-        "arch": arch, "shape": shape_name,
-        "multi_pod": multi_pod, "mesh": str(dict(mesh.shape)),
-        "fsdp": fsdp, "microbatch": microbatch, "remat": remat,
-        "flash": flash, "sharded_accum": sharded_accum,
-        "kv_repeat": kv_repeat, "remat_policy": remat_policy,
-        "mode": mode, "moe_ep_axis": moe_ep_axis,
-    }
-    try:
-        dp_override = tuple(mesh.axis_names) if mode == "dp_only" else None
-        with mesh, sh.activation_sharding(
-                mesh, dp=dp_override, tp=(mode != "dp_only")):
-            if shape.kind in ("train", "prefill"):
-                params_abs, opt_abs = steps_lib.abstract_state(cfg, tcfg)
-                pspecs = sh.fit_pspecs(
-                    sh.params_pspecs(params_abs, cfg, mesh, fsdp=fsdp,
-                                     mode=mode, moe_ep_axis=moe_ep_axis),
-                    params_abs, mesh,
-                )
-                p_sh = sh.to_shardings(pspecs, mesh)
-                batch_abs = steps_lib.input_specs(cfg, shape)
-                bsp_all = sh.batch_pspecs(cfg, mesh)
-                if mode == "dp_only":
-                    from jax.sharding import PartitionSpec as _P
-                    bsp_all = {
-                        k: _P(dp_override, *list(v)[1:])
-                        for k, v in bsp_all.items()
-                    }
-                bspecs = {k: v for k, v in bsp_all.items()
-                          if k in batch_abs}
-                bspecs = sh.fit_pspecs(bspecs, batch_abs, mesh)
-                b_sh = sh.to_shardings(bspecs, mesh)
-                if shape.kind == "train":
-                    ospecs = sh.fit_pspecs(
-                        sh.opt_state_pspecs(opt_abs, pspecs), opt_abs, mesh
-                    )
-                    o_sh = sh.to_shardings(ospecs, mesh)
-                    step_fn = steps_lib.make_train_step(
-                        cfg, tcfg,
-                        accum_shardings=p_sh if sharded_accum else None,
-                    )
-                    jitted = jax.jit(
-                        step_fn,
-                        in_shardings=(p_sh, o_sh, b_sh, None),
-                        out_shardings=(p_sh, o_sh, None),
-                        donate_argnums=(0, 1),
-                    )
-                    lowered = jitted.lower(
-                        params_abs, opt_abs, batch_abs,
-                        jax.ShapeDtypeStruct((), jnp.int32),
-                    )
-                else:
-                    step_fn = steps_lib.make_prefill_step(cfg)
-                    cache_abs = jax.eval_shape(step_fn, params_abs,
-                                               batch_abs)[1]
-                    cspecs = sh.fit_pspecs(
-                        sh.cache_pspecs(cache_abs, mesh), cache_abs, mesh
-                    )
-                    c_sh = sh.to_shardings(cspecs, mesh)
-                    jitted = jax.jit(
-                        step_fn, in_shardings=(p_sh, b_sh),
-                        out_shardings=(None, c_sh),
-                    )
-                    lowered = jitted.lower(params_abs, batch_abs)
-            else:  # decode
-                params_abs, _ = steps_lib.abstract_state(cfg, TrainConfig())
-                pspecs = sh.fit_pspecs(
-                    sh.params_pspecs(params_abs, cfg, mesh, fsdp=False),
-                    params_abs, mesh,
-                )
-                p_sh = sh.to_shardings(pspecs, mesh)
-                cache_abs = steps_lib.abstract_cache(cfg, shape)
-                cspecs = sh.fit_pspecs(
-                    sh.cache_pspecs(cache_abs, mesh), cache_abs, mesh
-                )
-                c_sh = sh.to_shardings(cspecs, mesh)
-                tok = steps_lib.input_specs(cfg, shape)["token"]
-                dp = tuple(a for a in ("pod", "data")
-                           if a in mesh.axis_names)
-                t_sh = sh.to_shardings(
-                    {"token": sh.fit_spec(P(dp, None), tok.shape, mesh)},
-                    mesh)["token"]
-                step_fn = steps_lib.make_serve_step(cfg)
-                jitted = jax.jit(
-                    step_fn,
-                    in_shardings=(p_sh, c_sh, t_sh),
-                    out_shardings=(None, c_sh),
-                    donate_argnums=(1,),
-                )
-                lowered = jitted.lower(params_abs, cache_abs, tok)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
-
-            mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
-            if isinstance(cost, (list, tuple)):  # newer jax: one per device
-                cost = cost[0] if cost else {}
-            hlo = compiled.as_text()
-            pod_stride = 256 if multi_pod else 10**9
-            ana = hlo_analysis.analysis_record(hlo, pod_stride=pod_stride)
-
-        rec.update({
-            "status": "ok",
-            "lower_s": round(t_lower, 1),
-            "compile_s": round(t_compile, 1),
-            # XLA's own numbers (loop bodies counted ONCE — see
-            # hlo_analysis docstring) kept for reference:
-            "xla_flops": float(cost.get("flops", -1.0)) if cost else -1.0,
-            "xla_bytes": float(cost.get("bytes accessed", -1.0))
-            if cost else -1.0,
-            # trip-count-corrected per-device numbers:
-            "flops": ana["flops"],
-            "bytes_accessed": ana["bytes_accessed"],
-            "bytes_accessed_bf16eq": ana["bytes_accessed_bf16eq"],
-            "collectives": ana["collectives"],
-            "collective_operand_bytes": ana["collective_operand_bytes"],
-            "collective_link_bytes": ana["collective_link_bytes"],
-            "collective_link_bytes_bf16eq":
-                ana["collective_link_bytes_bf16eq"],
-            "cross_pod_link_bytes": ana["cross_pod_link_bytes"],
-            "n_devices": mesh.size,
-        })
-        # ---- roofline terms (seconds) ----
-        tokens = shape.global_batch * (
-            shape.seq_len if shape.kind in ("train", "prefill") else 1
-        )
-        total_p, active_p = cfg.param_counts()
-        model_flops = (6.0 if shape.kind == "train" else 2.0) \
-            * active_p * tokens
-        rec["roofline"] = {
-            "compute_s": ana["flops"] / PEAK_FLOPS,
-            # bf16-equivalent terms: XLA:CPU float-normalization upcasts
-            # bf16→f32; the deployment policy is bf16 activations and
-            # collectives, so the eq terms are the TPU-faithful ones
-            # (raw terms kept alongside).
-            "memory_s": ana["bytes_accessed_bf16eq"] / HBM_BW,
-            "memory_s_raw": ana["bytes_accessed"] / HBM_BW,
-            # projection with the Pallas flash kernel (score traffic
-            # retired in VMEM — kernels/flash_attention.py):
-            "memory_s_pallas": (ana["bytes_accessed_bf16eq"]
-                                - ana.get("attn_bytes_bf16eq", 0.0))
-            / HBM_BW,
-            "collective_s": ana["collective_link_bytes_bf16eq"] / LINK_BW,
-            "collective_s_raw": ana["collective_link_bytes"] / LINK_BW,
-            "model_flops_global": model_flops,
-            "model_flops_per_device": model_flops / mesh.size,
-            "useful_flops_ratio": (model_flops / mesh.size)
-            / max(ana["flops"], 1.0),
-        }
-        dom = max(
-            ("compute_s", "memory_s", "collective_s"),
-            key=lambda k: rec["roofline"][k],
-        )
-        rec["roofline"]["dominant"] = dom
-        try:
-            rec["memory_analysis"] = {
-                "argument_bytes": mem.argument_size_in_bytes,
-                "output_bytes": mem.output_size_in_bytes,
-                "temp_bytes": mem.temp_size_in_bytes,
-                "generated_code_bytes": mem.generated_code_size_in_bytes,
-                "alias_bytes": mem.alias_size_in_bytes,
-            }
-        except Exception:
-            rec["memory_analysis"] = str(mem)
-        if verbose:
-            r = rec["roofline"]
-            print(f"[dryrun] {arch} × {shape_name} "
-                  f"({'multi' if multi_pod else 'single'}-pod): OK  "
-                  f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
-            print(f"  memory_analysis: {rec['memory_analysis']}")
-            print(f"  flops/device: {rec['flops']:.3e}  "
-                  f"bytes/device: {rec['bytes_accessed']:.3e}  "
-                  f"coll-link bytes: {rec['collective_link_bytes']:.3e}")
-            print(f"  roofline: compute {r['compute_s']*1e3:.1f}ms  "
-                  f"memory {r['memory_s']*1e3:.1f}ms  "
-                  f"collective {r['collective_s']*1e3:.1f}ms  "
-                  f"dominant={r['dominant']}  "
-                  f"useful-flops-ratio {r['useful_flops_ratio']:.3f}")
-    except Exception as e:
-        rec.update({
-            "status": "error",
-            "error": f"{type(e).__name__}: {e}",
-            "traceback": traceback.format_exc()[-4000:],
-        })
-        if verbose:
-            print(f"[dryrun] {arch} × {shape_name}: FAILED {rec['error']}")
-    return rec
+from repro.api.aot import HBM_BW, LINK_BW, PEAK_FLOPS, run_cell  # noqa: F401
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS
 
 
 def main():

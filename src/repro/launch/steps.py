@@ -10,6 +10,7 @@ pjit gradient all-reduce computes the *decoded* coded aggregate
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -138,7 +139,36 @@ def make_train_step(
     return train_step
 
 
+_WARNED: set = set()
+
+
+def _warn_once(old: str, new: str) -> None:
+    if old in _WARNED:
+        return
+    _WARNED.add(old)
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
 def make_dist_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh,
+    optimizer=None,
+    axes: Tuple[str, str] = ("pod", "data"),
+) -> Callable:
+    """Deprecated direct entry point — :class:`repro.api.CodedSession`
+    owns the dist step (mesh, shardings, λ, EF residuals) end to end."""
+    _warn_once("steps_lib.make_dist_train_step",
+               "repro.api.CodedSession (it compiles and owns the dist "
+               "train step)")
+    return _make_dist_train_step(cfg, tcfg, mesh, optimizer=optimizer,
+                                 axes=axes)
+
+
+def _make_dist_train_step(
     cfg: ModelConfig,
     tcfg: TrainConfig,
     mesh,

@@ -1,20 +1,17 @@
-"""Fault-tolerant HGC training driver (deliverable b's end-to-end path).
+"""Fault-tolerant HGC training driver CLI.
 
-The full production loop, runnable in three aggregation modes
-(``--dist``):
+Thin front-end over the public object model (:mod:`repro.api`): flags →
+``CodedCluster`` + planner strategy + ``CodedSession`` → ``fit()``.
+The three ``--dist`` aggregation modes are session policies:
 
   * ``off`` — single-host reference loop: λ rides the per-example batch
     weights (coeff × λ) and the jit gradient reduction decodes the coded
     aggregate implicitly,
-  * ``coded`` — mesh-aware loop on a (pod, data[, model]) device mesh:
-    params/opt-state are sharded by ``dist.sharding`` rules, each
-    (pod, data) shard group computes its encoded message G_ij (eq. 22)
-    from its own batch slice, and ``dist.grad_sync`` runs the two-stage
-    coded decode (eqs. 25/27) as real shard_map collectives with λ as a
-    runtime operand — straggler drops and replans never recompile,
+  * ``coded`` — mesh-aware loop on a (pod, data[, model]) device mesh
+    with the two-stage coded decode (eqs. 25/27) as real shard_map
+    collectives, λ as a runtime operand (drops/replans never recompile),
   * ``coded_int8`` — same, with the bandwidth-limited edge→master hop
-    quantized to blockwise int8 + error feedback (``dist.compression``);
-    the per-pod EF residuals are part of the training state.
+    quantized to blockwise int8 + error feedback.
 
 Common to all modes: JNCSS plans the coding scheme from the cluster
 model (or --s_e/--s_w fixes it); every iteration simulates/observes the
@@ -33,134 +30,38 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
-import time
-from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint.store import CheckpointStore, config_hash
-from repro.configs.base import TrainConfig
+from repro.api import CodedCluster, CodedSession, planner_for_scheme
+# back-compat re-exports: these moved to repro.api (tests and user code
+# imported them from here)
+from repro.api.cluster import sample_straggler_pattern as \
+    _sample_straggler_pattern_impl
+from repro.api.session import (  # noqa: F401
+    _extend_streams,
+    _step_rng,
+    build_coded_batch,
+)
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
-from repro.core.hgc import HGCCode
-from repro.core.runtime_model import ClusterParams
-from repro.core.topology import Tolerance, Topology
-from repro.core import tradeoff
-from repro.data.pipeline import TokenStream
-from repro.dist.elastic import StragglerDetector, replan
-from repro.launch import steps as steps_lib
-from repro.optim import make_optimizer
-from repro.models import transformer as tf
+from repro.core.topology import Topology
+from repro.launch.steps import _warn_once
 
 
-@dataclasses.dataclass
-class HGCTrainState:
-    params: object
-    opt_state: object
-    step: int
+def _sample_straggler_pattern(rng, code, params, D):
+    """Back-compat alias of :func:`repro.api.sample_straggler_pattern`."""
+    return _sample_straggler_pattern_impl(rng, code, params, D)
 
 
-def _sample_straggler_pattern(rng, code: HGCCode, params: ClusterParams,
-                              D: float):
-    """Sample runtimes, wait per the HGC rule, return (fast_e, fast_w, T)."""
-    wt, eu, _ = params.sample_iteration(rng, D)
-    topo = code.topo
-    s_e, s_w = code.tol.s_e, code.tol.s_w
-    edge_T = np.empty(topo.n)
-    fast_w = []
-    off = 0
-    for i in range(topo.n):
-        mi = topo.m[i]
-        order = np.argsort(wt[off : off + mi])[: mi - s_w]
-        edge_T[i] = eu[i] + wt[off + order[-1]]
-        fast_w.append(tuple(sorted(order.tolist())))
-        off += mi
-    eorder = np.argsort(edge_T)[: topo.n - s_e]
-    fast_e = tuple(sorted(eorder.tolist()))
-    return fast_e, fast_w, float(edge_T[eorder[-1]]), wt
-
-
-def _step_rng(seed: int, step: int) -> np.random.Generator:
-    """Per-step straggler RNG: resume replays the exact pattern sequence
-    (bit-for-bit kill/resume needs history-independent sampling)."""
-    return np.random.default_rng(np.random.SeedSequence([seed, 7919, step]))
-
-
-def build_coded_batch(code: HGCCode, streams, fast_e, fast_w, seq_len,
-                      with_lam: bool = True):
-    """Global batch = all workers' assigned-part examples.
-
-    ``with_lam=True`` (single-host path): weights carry coeff × λ so the
-    jit gradient reduction decodes implicitly; straggling workers get
-    weight 0 (their rows still flow through the step fn — shapes are
-    static, only weights change).  ``with_lam=False`` (``--dist``
-    paths): weights carry the coding coefficients only — λ is applied
-    inside the shard_map decode, per shard group.  Example order is
-    (pod, data)-major either way, so sharding the batch dim over
-    ("pod", "data") hands worker (i, j) exactly its own examples.
-    """
-    lam = code.collapsed_weights(fast_e, fast_w) if with_lam else None
-    tokens, targets, weights = [], [], []
-    topo = code.topo
-    for i in range(topo.n):
-        for j in range(topo.m[i]):
-            w_idx = topo.flat_index(i, j)
-            coeff = code.worker_coeffs(i, j)
-            for k in code.assignment.worker_parts(i, j):
-                b = streams[k].next_batch()
-                tokens.append(b["tokens"])
-                targets.append(b["targets"])
-                w = b["weights"] * float(coeff[k])
-                if lam is not None:
-                    w = w * float(lam[w_idx])
-                weights.append(w)
-    return {
-        "tokens": np.concatenate(tokens, 0),
-        "targets": np.concatenate(targets, 0),
-        "weights": np.concatenate(weights, 0),
-        # fixed normalizer keeps the loss linear in the weights (exact
-        # coded decode); K parts × per-part token count
-        "denom": np.float32(
-            code.K * tokens[0].shape[0] * seq_len
-        ),
-    }
-
-
-def _make_cluster(kind: str, topo: Topology) -> ClusterParams:
-    """The simulated cluster the JNCSS planner prices.
-
-    ``homogeneous`` — every node identical (coding rarely pays off:
-    JNCSS correctly picks (0, 0) because tolerating an edge only raises
-    the load).  ``hetero`` — the last edge is a Type-III-style straggler
-    (slow, loss-prone uplink, paper §V-A flavor): the regime where JNCSS
-    actually buys edge tolerance (s_e ≥ 1).
-    """
-    base = ClusterParams.homogeneous(
-        topo, c=10.0, gamma=0.05, tau_w=50.0, p_w=0.2, tau_e=100.0,
-        p_e=0.1,
-    )
-    if kind == "homogeneous":
-        return base
-    tau_e = base.tau_e.copy()
-    p_e = base.p_e.copy()
-    tau_e[-1] = 2000.0
-    p_e[-1] = 0.4
-    return dataclasses.replace(base, tau_e=tau_e, p_e=p_e)
-
-
-def _extend_streams(streams, K: int, vocab: int, part_batch: int,
-                    seq_len: int, seed: int):
-    """K growth (replan / restored checkpoint) REUSES the existing part
-    streams — only the new parts get fresh resumable streams."""
-    while len(streams) < K:
-        streams.append(
-            TokenStream(vocab, part_batch, seq_len,
-                        seed=seed * 1000 + len(streams))
-        )
+def _make_cluster(kind: str, topo: Topology):
+    """Deprecated — use :meth:`repro.api.CodedCluster.homogeneous` /
+    :meth:`~repro.api.CodedCluster.hetero` (this shim returns the bare
+    ``ClusterParams`` those constructors wrap)."""
+    _warn_once("train._make_cluster",
+               "repro.api.CodedCluster.homogeneous / .hetero")
+    ctor = CodedCluster.hetero if kind == "hetero" \
+        else CodedCluster.homogeneous
+    return ctor(topo=topo).params
 
 
 def main(argv=None):
@@ -226,258 +127,47 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
-    topo = Topology.uniform(args.n_edges, args.n_workers)
-    cluster = _make_cluster(args.cluster, topo)
-    # plan the code
-    if args.scheme == "hgc_jncss":
-        K = args.K or tradeoff.compatible_K(
-            topo, Tolerance(args.s_e, args.s_w), at_least=topo.total_workers
-        )
-        plan = replan(cluster, K, seed=args.seed)
-        code = plan.code
-        print(f"[train] JNCSS chose (s_e={code.tol.s_e}, "
-              f"s_w={code.tol.s_w}), D={code.load}, K={code.K}, "
-              f"T̂={plan.expected_iteration_ms:.0f} ms")
-    else:
-        tol = Tolerance(
-            0 if args.scheme == "uncoded" else args.s_e,
-            0 if args.scheme == "uncoded" else args.s_w,
-        )
-        K = args.K or tradeoff.compatible_K(
-            topo, tol, at_least=topo.total_workers
-        )
-        code = HGCCode.build(topo, tol, K=K, seed=args.seed)
-        print(f"[train] fixed scheme {args.scheme}: (s_e={tol.s_e}, "
-              f"s_w={tol.s_w}), D={code.load}, K={K}")
-
-    tcfg = TrainConfig(
-        optimizer=args.optimizer, lr=args.lr, total_steps=args.steps,
-        warmup_steps=max(args.steps // 10, 1), grad_clip=1.0,
-        scheme=args.scheme, s_e=code.tol.s_e, s_w=code.tol.s_w, K=code.K,
-        dist_mode=args.dist,
-        grad_compression="int8" if args.dist == "coded_int8" else "none",
-        grad_compression_block=args.grad_block,
-    )
-    optimizer = make_optimizer(args.optimizer)
-
-    # mesh (--dist modes); imports stay lazy so the single-host path
-    # never touches jax.sharding machinery
-    mesh = None
-    model_shards = args.tp or args.model_shards
-    if args.dist != "off":
-        from repro.dist import grad_sync
-        from repro.dist.mesh import make_test_mesh
-        from repro.dist.sharding import validate_tp
-
-        validate_tp(cfg, model_shards)
-        mesh = make_test_mesh(args.n_edges, args.n_workers, model_shards)
-        print(f"[train] dist={args.dist}: mesh "
-              f"(pod={args.n_edges} × data={args.n_workers} × "
-              f"model={model_shards}), "
-              f"grad_compression={tcfg.grad_compression}"
-              + (f", TP degree {model_shards}" if model_shards > 1 else ""))
-    elif args.tp > 1:
+    tp = args.tp or args.model_shards
+    if args.dist == "off" and tp > 1:
         raise SystemExit("--tp requires a --dist mode (the single-host "
                          "reference loop has no model mesh axis)")
-
-    # data: one resumable stream per dataset part
-    streams = []
-    _extend_streams(streams, code.K, cfg.vocab, args.part_batch,
-                    args.seq_len, args.seed)
-
-    # init / resume
-    rng = jax.random.PRNGKey(args.seed)
-    params = tf.init_params(rng, cfg)
-    opt_state = optimizer.init(params)
-    detector = StragglerDetector(cluster)
-    start = 0
-    store = None
-    restored_extra: Dict = {}
-    if args.checkpoint_dir:
-        # hash the MODEL config only: run hyperparameters (total_steps,
-        # lr schedule) legitimately change across restarts
-        store = CheckpointStore(
-            args.checkpoint_dir, keep=3, cfg_hash=config_hash(cfg),
+    ctor = CodedCluster.hetero if args.cluster == "hetero" \
+        else CodedCluster.homogeneous
+    try:
+        session = CodedSession(
+            ctor(args.n_edges, args.n_workers),
+            cfg,
+            planner=planner_for_scheme(args.scheme, args.s_e, args.s_w),
+            mode=args.dist,
+            tp=tp,
+            seq_len=args.seq_len,
+            part_batch=args.part_batch,
+            K=args.K,
+            optimizer=args.optimizer,
+            lr=args.lr,
+            total_steps=args.steps,
+            grad_block=args.grad_block,
+            seed=args.seed,
+            scheme=args.scheme,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            resume=args.resume,
+            log_every=args.log_every,
         )
-        if args.resume and store.latest_step() is not None:
-            start, state, restored_extra = store.restore()
-            params = jax.tree.map(jnp.asarray, state["params"])
-            opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
-            ck = restored_extra.get("code")
-            if ck and (ck["s_e"], ck["s_w"], ck["K"]) != (
-                    code.tol.s_e, code.tol.s_w, code.K):
-                # the run had replanned before the kill — rebuild the
-                # deployed code deterministically (same seed ⇒ same code)
-                code = HGCCode.build(
-                    topo, Tolerance(ck["s_e"], ck["s_w"]), K=ck["K"],
-                    seed=args.seed,
-                )
-                print(f"[train] restored replanned code "
-                      f"(s_e={ck['s_e']}, s_w={ck['s_w']}, K={ck['K']})")
-            saved_streams = restored_extra["streams"]
-            # the saved list may exceed code.K (a replan once grew K and
-            # later shrank it — streams are never discarded)
-            _extend_streams(streams, max(code.K, len(saved_streams)),
-                            cfg.vocab, args.part_batch, args.seq_len,
-                            args.seed)
-            for k, sd in enumerate(saved_streams):
-                streams[k].load_state_dict(sd)
-            if "detector" in restored_extra:
-                detector.load_state_dict(restored_extra["detector"])
-            print(f"[train] resumed from step {start}")
-
-    # shard the training state onto the mesh, set up λ / EF residuals,
-    # and jit the step with PINNED output shardings — outputs land in
-    # exactly the input layouts, so step 2 reuses step 1's executable
-    # (the zero-recompile invariant)
-    residual: Dict = {}
-    batch_sh = lam_sh = None
-    if mesh is None:
-        train_step = jax.jit(
-            steps_lib.make_train_step(cfg, tcfg, optimizer=optimizer)
-        )
-    else:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
-        from repro.dist import compression as comp_lib
-        from repro.dist import sharding as shard_lib
-
-        param_sh, opt_sh = shard_lib.state_shardings(
-            params, opt_state, cfg, mesh, fsdp=tcfg.fsdp,
-            head_aligned=True,
-        )
-        params = jax.device_put(params, param_sh)
-        opt_state = jax.device_put(opt_state, opt_sh)
-        dp = ("pod", "data")
-        batch_sh = {
-            "tokens": NamedSharding(mesh, P(dp, None)),
-            "targets": NamedSharding(mesh, P(dp, None)),
-            "weights": NamedSharding(mesh, P(dp, None)),
-            "denom": NamedSharding(mesh, P()),
-        }
-        lam_sh = NamedSharding(mesh, P("pod", "data"))
-        res_sh: Dict = {}
-        if tcfg.grad_compression == "int8":
-            if "ef_residual" in restored_extra:
-                residual = jax.tree.map(
-                    jnp.asarray, restored_extra["ef_residual"]
-                )
-            else:
-                residual = comp_lib.init_pod_residuals(params, args.n_edges)
-            # under TP the residual follows its gradient leaf onto the
-            # model axis (same pspec rules as the step's shard_map)
-            res_sh = shard_lib.to_shardings(
-                shard_lib.residual_pspecs(params, cfg, mesh,
-                                          fsdp=tcfg.fsdp),
-                mesh,
-            )
-            residual = jax.device_put(residual, res_sh)
-        train_step = jax.jit(
-            steps_lib.make_dist_train_step(cfg, tcfg, mesh,
-                                           optimizer=optimizer),
-            out_shardings=(param_sh, opt_sh, res_sh,
-                           NamedSharding(mesh, P())),
-        )
-
-    def save_checkpoint(step):
-        extra = {
-            "streams": [s.state_dict() for s in streams],
-            "detector": detector.state_dict(),
-            "code": {"s_e": code.tol.s_e, "s_w": code.tol.s_w,
-                     "K": code.K},
-        }
-        if tcfg.grad_compression == "int8" and mesh is not None:
-            extra["ef_residual"] = residual
-        store.save(
-            step, {"params": params, "opt_state": opt_state}, extra=extra
-        )
-
-    t0 = time.time()
-    sim_ms = 0.0
-    losses = []
-    steps_done = 0
-    for step in range(start, args.steps):
-        steps_done += 1
-        fast_e, fast_w, t_iter, wt = _sample_straggler_pattern(
-            _step_rng(args.seed, step), code, cluster, code.load
-        )
-        if step == args.force_drop_step and \
-                0 <= args.force_drop_edge < topo.n and code.tol.s_e > 0:
-            # forced straggler drop: exercise the zero-recompile claim —
-            # only the λ operand changes, never the compiled step
-            fast_e = tuple(
-                i for i in range(topo.n) if i != args.force_drop_edge
-            )[: topo.n - code.tol.s_e]
-        detector.observe(wt)
-        sim_ms += t_iter
-        batch = build_coded_batch(
-            code, streams, fast_e, fast_w, args.seq_len,
-            with_lam=(mesh is None),
-        )
-        if mesh is None:
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, metrics = train_step(
-                params, opt_state, batch, jnp.asarray(step)
-            )
-        else:
-            batch = {
-                k: jax.device_put(jnp.asarray(v), batch_sh[k])
-                for k, v in batch.items()
-            }
-            lam_arr = jax.device_put(
-                jnp.asarray(grad_sync.lam_array_from_code(
-                    code, fast_e, fast_w, args.n_edges, args.n_workers
-                )),
-                lam_sh,
-            )
-            params, opt_state, residual, metrics = train_step(
-                params, opt_state, batch, lam_arr, residual,
-                jnp.asarray(step),
-            )
-        losses.append(float(metrics["loss"]))
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"[train] step {step:5d} loss {losses[-1]:.4f} "
-                  f"grad_norm {float(metrics['grad_norm']):.3f} "
-                  f"sim_iter {t_iter:.0f} ms "
-                  f"stragglers: edges={sorted(set(range(topo.n)) - set(fast_e))}")
-        if args.replan_every and (step + 1) % args.replan_every == 0:
-            plan = replan(detector.updated_params(code.load), code.K,
-                          seed=args.seed, reuse=code)
-            if plan.code is not code:
-                print(f"[train] replan: tolerance → (s_e={plan.tol.s_e}, "
-                      f"s_w={plan.tol.s_w}), K={plan.K}, "
-                      f"T̂={plan.expected_iteration_ms:.0f} ms")
-                code = plan.code
-                # the compatible K for the new tolerance may exceed the
-                # old one — existing part streams are reused, only the
-                # new parts get streams
-                _extend_streams(streams, code.K, cfg.vocab,
-                                args.part_batch, args.seq_len, args.seed)
-        # checkpoint AFTER a possible replan so the saved (tolerance, K)
-        # is what the surviving run would actually train with
-        if store and (step + 1) % args.checkpoint_every == 0:
-            save_checkpoint(step + 1)
-        if args.stop_after and step + 1 >= args.stop_after:
-            print(f"[train] stopping after step {step} (simulated kill)")
-            break
-
-    cache_entries = -1
-    size_fn = getattr(train_step, "_cache_size", None)
-    if callable(size_fn):
-        cache_entries = int(size_fn())
-    wall = time.time() - t0
-    print(f"[train] done: {steps_done} steps in {wall:.1f}s wall, "
-          f"{sim_ms/1e3:.1f}s simulated cluster time, "
-          f"jit cache entries: {cache_entries}")
+    except ValueError as e:
+        raise SystemExit(f"[train] {e}")
+    report = session.fit(
+        args.steps,
+        replan_every=args.replan_every,
+        force_drop_edge=args.force_drop_edge,
+        force_drop_step=args.force_drop_step,
+        stop_after=args.stop_after,
+    )
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            json.dump({
-                "dist": args.dist,
-                "first_step": start,
-                "losses": losses,
-                "jit_cache_entries": cache_entries,
-            }, f, indent=1)
+            json.dump(report, f, indent=1)
     if args.expect_zero_recompile:
+        cache_entries = report["jit_cache_entries"]
         if cache_entries == -1:
             # private jax API unavailable on this version — can't
             # verify, but absence of the counter is not a recompile
@@ -488,7 +178,7 @@ def main(argv=None):
                   f"(zero recompiles), found {cache_entries}",
                   file=sys.stderr)
             sys.exit(1)
-    return params
+    return session.params
 
 
 if __name__ == "__main__":

@@ -782,15 +782,94 @@ def prefill(
     tokens: jnp.ndarray,
     enc_frames: Optional[jnp.ndarray] = None,
     visual_embeds: Optional[jnp.ndarray] = None,
+    last_only: bool = False,
 ) -> Tuple[jnp.ndarray, PyTree]:
     """Full-sequence forward that also materializes the decode cache.
 
     Note: for "local" layers the produced cache is the *full-length*
     K/V (the ring-buffer view is only used in decode_step); prefill→
-    decode handoff trims to the window.
+    decode handoff trims to the window (:func:`prefill_to_decode_cache`).
+    ``last_only`` unembeds only the final position — the serving path
+    never needs the full (B, S, V) logits.
     """
     logits, cache, _ = forward(
         params, cfg, tokens, enc_frames=enc_frames,
         visual_embeds=visual_embeds, return_cache=True,
+        last_only=last_only,
     )
     return logits, cache
+
+
+def bulk_prefill_supported(cfg: ModelConfig) -> bool:
+    """Whether the bulk prefill → decode-cache handoff covers this arch.
+
+    The full-sequence forward only materializes attention K/V cache
+    entries; recurrent states (SSD, RG-LRU) and the encoder-decoder
+    cross caches exist only on the decode path, so those archs hand off
+    token-by-token (the exact-handoff fallback).
+    """
+    return (set(cfg.block_pattern) <= {"global", "local"}
+            and not cfg.is_encdec)
+
+
+def prefill_to_decode_cache(
+    cfg: ModelConfig,
+    prefill_cache: PyTree,
+    max_len: int,
+    dtype: Optional[str] = None,
+) -> PyTree:
+    """Re-lay a bulk-prefill cache into ``decode_step``'s layout.
+
+    Prefill K/V entries are full-length ``(…, S, Kv·Dh)``; the decode
+    cache holds ``(…, C, Kv·Dh)`` ring buffers with ``C =
+    min(window, max_len)`` for local layers (``max_len`` for global)
+    and slot convention ``slot = pos % C`` — so the handoff keeps the
+    last ``min(S, C)`` positions and scatters each to its ring slot,
+    reproducing exactly the state ``S`` decode steps would have built.
+    """
+    if not bulk_prefill_supported(cfg):
+        raise ValueError(
+            f"{cfg.name}: bulk prefill handoff needs an attention-only "
+            f"decoder (pattern {cfg.block_pattern}); use the exact "
+            f"token-by-token handoff"
+        )
+    dt = jnp.dtype(dtype or cfg.dtype)
+    P = len(cfg.block_pattern)
+    S = None
+
+    def convert(entry, kind):
+        nonlocal S
+        C = _cache_len(cfg, kind, max_len)
+        k, v = entry["k"], entry["v"]
+        S = k.shape[-2]
+        if kind != "local" and S > C:
+            raise ValueError(
+                f"prompt length {S} exceeds cache size {C} — raise "
+                f"max_len"
+            )
+        keep = min(S, C)
+        pos = jnp.arange(S - keep, S)
+        slots = pos % C  # distinct (a contiguous run of length ≤ C)
+
+        def scatter(x):
+            buf = jnp.zeros(x.shape[:-2] + (C, x.shape[-1]), dt)
+            return buf.at[..., slots, :].set(
+                x[..., S - keep :, :].astype(dt)
+            )
+
+        return {"k": scatter(k), "v": scatter(v)}
+
+    cache = {
+        "groups": {
+            f"p{k}": convert(prefill_cache["groups"][f"p{k}"],
+                             cfg.block_pattern[k])
+            for k in range(P)
+        },
+        "rest": {
+            f"r{k}": convert(prefill_cache["rest"][f"r{k}"],
+                             cfg.block_pattern[k])
+            for k in range(cfg.n_layers % P)
+        },
+    }
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    return cache

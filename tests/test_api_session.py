@@ -1,0 +1,284 @@
+"""The public object model: planner strategies, CodedCluster, and the
+CodedSession elastic loop.
+
+The load-bearing test is the shrink contract (ISSUE satellite): a
+session that permanently loses a pod replans on the survivors, keeps
+training, and a killed-and-resumed run reproduces the uninterrupted
+trajectory bit-for-bit — the checkpoint carries the shrink record, the
+replanned code, the detector EWMA and the stream states.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CodedCluster,
+    FixedPlanner,
+    JNCSSPlanner,
+    Planner,
+    Tolerance,
+    Topology,
+    UniformPlanner,
+    get_planner,
+    planner_for_scheme,
+)
+
+
+def _smoke_cfg(arch="llama3-8b"):
+    from repro.configs.registry import get_smoke_config
+
+    return get_smoke_config(arch)
+
+
+# ----------------------------------------------------------------------
+# planner strategies
+# ----------------------------------------------------------------------
+def test_planner_strategies():
+    cluster = CodedCluster.hetero(2, 4)
+    for spec, expect_jncss in (("jncss", True), ("fixed", False),
+                               ("uniform", False)):
+        planner = get_planner(spec, 1, 1)
+        assert isinstance(planner, Planner)
+        K = planner.initial_K(cluster.topo)
+        plan = planner.plan(cluster.params, K, seed=0)
+        assert plan.K >= cluster.topo.total_workers
+        assert plan.code.K == plan.K
+        assert (plan.jncss is not None) == expect_jncss
+        assert plan.expected_iteration_ms > 0
+        # stable re-plan reuses the deployed code (identity, not copy)
+        again = planner.plan(cluster.params, plan.K, seed=0,
+                             reuse=plan.code)
+        if again.tol == plan.tol and again.K == plan.K:
+            assert again.code is plan.code
+    assert get_planner("uniform").tol == Tolerance(0, 0)
+    assert isinstance(planner_for_scheme("hgc_jncss"), JNCSSPlanner)
+    assert isinstance(planner_for_scheme("hgc", 1, 1), FixedPlanner)
+    assert planner_for_scheme("uncoded").tol == Tolerance(0, 0)
+    with pytest.raises(ValueError, match="unknown planner"):
+        get_planner("bogus")
+
+
+def test_plan_lam_array_matches_grad_sync():
+    from repro.dist.grad_sync import lam_array_from_code
+
+    cluster = CodedCluster.hetero(2, 4)
+    plan = FixedPlanner(1, 1).plan(cluster.params, 8, seed=0)
+    fast_e = (0,)
+    fast_w = [(0, 1, 2), (1, 2, 3)]
+    np.testing.assert_array_equal(
+        plan.lam_array(fast_e, fast_w),
+        lam_array_from_code(plan.code, fast_e, fast_w, 2, 4),
+    )
+    assert plan.deployed == {"s_e": 1, "s_w": 1, "K": plan.K}
+
+
+# ----------------------------------------------------------------------
+# CodedCluster
+# ----------------------------------------------------------------------
+def test_cluster_from_observations_fits_compute_term():
+    topo = Topology.uniform(2, 3)
+    truth = CodedCluster.homogeneous(2, 3, c=25.0).params
+    rng = np.random.default_rng(0)
+    D = 2.0
+    obs = [truth.sample_iteration(rng, D)[0] for _ in range(400)]
+    cluster = CodedCluster.from_observations(topo, obs, D)
+    # fitted per-part compute ≈ the true c (sampling noise only)
+    np.testing.assert_allclose(cluster.params.c, truth.c, rtol=0.25)
+    assert cluster.detector.n_obs == 400
+
+
+def test_cluster_shrink_records_original_indices():
+    cluster = CodedCluster.homogeneous(4, 2)
+    s1 = cluster.shrink(dead_edges=[1])
+    assert s1.topo.m == (2, 2, 2)
+    assert s1.dead_edges == (1,)
+    # second shrink uses CURRENT indexing: edge 2 of the survivors
+    # [0, 2, 3] is original edge 3
+    s2 = s1.shrink(dead_edges=[2])
+    assert s2.topo.m == (2, 2)
+    assert s2.dead_edges == (1, 3)
+    # the record round-trips through a checkpoint snapshot
+    restored = cluster.restored(json.loads(json.dumps(s2.state_dict())))
+    assert restored.topo == s2.topo
+    assert restored.dead_edges == (1, 3)
+
+
+def test_cluster_shrink_translates_worker_indices():
+    cluster = CodedCluster.homogeneous(2, 3)
+    s1 = cluster.shrink(dead_workers=[(0, 0)])
+    assert s1.topo.m == (2, 3)
+    assert s1.dead_workers == ((0, 0),)
+    # current worker (0, 0) of the survivors is ORIGINAL (0, 1) — a
+    # repeated shrink must keep killing, not re-record the same node
+    s2 = s1.shrink(dead_workers=[(0, 0)])
+    assert s2.topo.m == (1, 3)
+    assert s2.dead_workers == ((0, 0), (0, 1))
+    # composition with a prior edge death: current edge 0 is original 1
+    s3 = cluster.shrink(dead_edges=[0]).shrink(dead_workers=[(0, 2)])
+    assert s3.dead_workers == ((1, 2),)
+    assert s3.topo.m == (2,)
+
+
+# ----------------------------------------------------------------------
+# CodedSession: shrink → replan → keep training → kill/resume
+# ----------------------------------------------------------------------
+def _make_session(ck_dir, resume=False, steps=8):
+    from repro.api import CodedSession
+
+    return CodedSession(
+        CodedCluster.homogeneous(3, 2),
+        _smoke_cfg(),
+        planner="jncss",
+        mode="off",
+        seq_len=16,
+        optimizer="sgd",
+        lr=0.05,
+        total_steps=steps,
+        seed=0,
+        checkpoint_dir=str(ck_dir),
+        checkpoint_every=2,
+        resume=resume,
+        log_every=100,
+        verbose=False,
+    )
+
+
+def test_session_shrink_replan_kill_resume_bit_for_bit(tmp_path):
+    # uninterrupted twin: 4 steps, pod 1 dies, 4 more steps
+    a = _make_session(tmp_path / "a")
+    a.fit(4)
+    a.shrink(dead_edges=[1])
+    assert a.cluster.topo.m == (2, 2)
+    a.fit(8)
+    assert len(a.losses) == 8 and np.all(np.isfinite(a.losses))
+
+    # killed twin: same through step 6 (checkpointed), then a NEW
+    # session constructed with the ORIGINAL cluster resumes
+    b1 = _make_session(tmp_path / "b")
+    b1.fit(4)
+    b1.shrink(dead_edges=[1])
+    b1.fit(6)
+    meta = json.load(open(os.path.join(
+        str(tmp_path / "b"), "step_0000000006", "meta.json")))
+    assert meta["extra"]["cluster"]["dead_edges"] == [1]
+
+    b2 = _make_session(tmp_path / "b", resume=True)
+    assert b2.cluster.topo.m == (2, 2)          # shrink restored
+    assert b2.cluster.dead_edges == (1,)
+    assert b2.code.topo == b2.cluster.topo      # code rebuilt to match
+    b2.fit(8)
+    # bit-for-bit, not allclose
+    assert a.losses[:6] == b1.losses
+    assert a.losses[6:] == b2.losses
+
+
+def test_session_step_and_eval(tmp_path):
+    s = _make_session(tmp_path / "c", steps=4)
+    m = s.step()
+    assert np.isfinite(float(m["loss"]))
+    batch = s.build_batch((0, 1, 2), [(0, 1), (0, 1), (0, 1)])
+    ev = s.eval_step({k: v for k, v in batch.items() if k != "denom"})
+    assert np.isfinite(ev["loss"])
+
+
+def test_serve_only_session_rejects_training():
+    from repro.api import CodedSession
+
+    s = CodedSession(None, _smoke_cfg())
+    with pytest.raises(RuntimeError, match="serve-only"):
+        s.fit(1)
+    with pytest.raises(RuntimeError, match="serve-only"):
+        s.step()
+
+
+def test_session_shrink_in_dist_int8_carries_residual(tmp_path):
+    """Losing a pod under coded_int8 rebuilds the mesh AND carries the
+    surviving pod's error-feedback residual row (not zeros, not the
+    checkpointed snapshot).  Runs in a subprocess: the forced 8-device
+    flag must not leak into this session's jax."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import jax, numpy as np
+        from repro.api import CodedCluster, CodedSession
+        from repro.configs.registry import get_smoke_config
+
+        s = CodedSession(
+            CodedCluster.hetero(3, 2), get_smoke_config("llama3-8b"),
+            planner="fixed", mode="coded_int8", seq_len=16,
+            optimizer="sgd", lr=0.05, total_steps=6, seed=0,
+            log_every=100, verbose=False,
+        )
+        s.fit(3)
+        leaf0 = np.asarray(jax.tree.leaves(s.residual)[0])
+        assert leaf0.shape[0] == 3
+        s.shrink(dead_edges=[1])
+        leaf1 = np.asarray(jax.tree.leaves(s.residual)[0])
+        assert leaf1.shape[0] == 2, leaf1.shape
+        # the surviving pods' live residual rows rode the mesh rebuild
+        np.testing.assert_array_equal(leaf1[0], leaf0[0])
+        np.testing.assert_array_equal(leaf1[1], leaf0[2])
+        assert float(np.abs(leaf1).max()) > 0.0  # not re-zeroed
+        s.fit(6)
+        assert len(s.losses) == 6 and np.all(np.isfinite(s.losses))
+        print("SHRINK_INT8_OK")
+        """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-2000:]}"
+    assert "SHRINK_INT8_OK" in r.stdout
+
+
+# ----------------------------------------------------------------------
+# checkpoint schema version (ISSUE satellite)
+# ----------------------------------------------------------------------
+def test_checkpoint_schema_version_mismatch_is_clear(tmp_path):
+    from repro.checkpoint.store import SCHEMA_VERSION, CheckpointStore
+
+    store = CheckpointStore(str(tmp_path / "ck"))
+    store.save(1, {"w": np.ones(3, np.float32)})
+    meta_path = os.path.join(str(tmp_path / "ck"), "step_0000000001",
+                             "meta.json")
+    meta = json.load(open(meta_path))
+    assert meta["schema_version"] == SCHEMA_VERSION
+
+    # stale checkpoint from a future/past layout → clear message, not a
+    # cryptic pytree-structure error
+    meta["schema_version"] = SCHEMA_VERSION + 1
+    json.dump(meta, open(meta_path, "w"))
+    with pytest.raises(ValueError, match="schema v"):
+        store.restore()
+
+    # pre-versioning checkpoint (no stamp at all) → same clear failure
+    del meta["schema_version"]
+    json.dump(meta, open(meta_path, "w"))
+    with pytest.raises(ValueError, match="schema v1"):
+        store.restore()
+
+
+def test_deprecation_shims_warn_once():
+    import warnings
+
+    from repro.core.topology import Topology
+    from repro.launch import steps as steps_lib
+    from repro.launch import train as train_mod
+
+    steps_lib._WARNED.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        train_mod._make_cluster("homogeneous", Topology.uniform(2, 2))
+        train_mod._make_cluster("hetero", Topology.uniform(2, 2))
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "repro.api" in str(deps[0].message)

@@ -1,0 +1,36 @@
+"""The public-API boundary, enforced in tier 1: examples import only
+``repro.api`` (+ configs/data); the black-box system suite touches only
+the CLI mains.  CI runs the same script as a standalone step."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_import_lint_passes():
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "import_lint.py")],
+        capture_output=True, text=True, timeout=60,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_import_lint_catches_a_leak(tmp_path):
+    # a violating example is actually flagged (guards the linter itself)
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "import_lint", REPO / "tools" / "import_lint.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert not mod._is_allowed_example("repro.launch.steps")
+    assert not mod._is_allowed_example("repro.dist.grad_sync")
+    assert mod._is_allowed_example("repro.api.session")
+    assert mod._is_allowed_example("repro.configs.registry")
+    assert mod._is_allowed_example("numpy")
+    assert mod._is_allowed_system_test("repro.launch.train", ["main"])
+    assert not mod._is_allowed_system_test("repro.launch.steps",
+                                           ["input_specs"])
+    assert not mod._is_allowed_system_test("repro.launch.train", None)

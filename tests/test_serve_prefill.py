@@ -1,0 +1,125 @@
+"""Serving path: the bulk tf.prefill → decode-cache handoff.
+
+Contracts:
+  1. bulk prefill == exact token-by-token handoff (logits AND cache),
+     incl. the local-attention ring-buffer trim when the prompt exceeds
+     the window,
+  2. recurrent archs fall back to the exact path automatically and
+     still generate,
+  3. `serve --tp 2` produces tokens identical to `--tp 1` (f32 — bf16
+     rounding is shard-layout-dependent) on an 8-host-device mesh.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import serving
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as tf
+
+
+def _f32(arch):
+    return dataclasses.replace(get_smoke_config(arch), dtype="float32")
+
+
+def _prefill_both(cfg, B, S, max_len):
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab)
+    bulk = serving.make_prefill_fn(cfg, max_len)(params, tokens)
+    exact = serving.make_prefill_fn(cfg, max_len, exact=True)(
+        params, tokens)
+    return params, tokens, bulk, exact
+
+
+@pytest.mark.parametrize("arch,S,max_len", [
+    ("llama3-8b", 12, 24),        # plain GQA + rope
+    ("qwen2-vl-2b", 12, 24),      # M-RoPE positions
+    ("gemma3-27b", 40, 48),       # local/global: S > window=16 → ring trim
+])
+def test_bulk_prefill_matches_exact_handoff(arch, S, max_len):
+    cfg = _f32(arch)
+    assert tf.bulk_prefill_supported(cfg)
+    _, _, (bl, bc), (el, ec) = _prefill_both(cfg, 2, S, max_len)
+    np.testing.assert_allclose(np.asarray(bl), np.asarray(el),
+                               rtol=0, atol=2e-4)
+    flat_b = jax.tree.leaves(bc)
+    flat_e = jax.tree.leaves(ec)
+    assert len(flat_b) == len(flat_e)
+    for a, b in zip(flat_b, flat_e):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0, atol=2e-4)
+
+
+def test_bulk_then_decode_continues_exactly():
+    """Tokens generated after a bulk handoff == after an exact handoff."""
+    cfg = _f32("gemma3-27b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 24), 0,
+                                cfg.vocab)
+    a = serving.generate(params, cfg, prompt, 8, max_len=40)
+    b = serving.generate(params, cfg, prompt, 8, max_len=40,
+                         exact_handoff=True)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_recurrent_arch_falls_back_to_exact():
+    cfg = _f32("mamba2-370m")
+    assert not tf.bulk_prefill_supported(cfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        tf.prefill_to_decode_cache(cfg, {}, 16)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                cfg.vocab)
+    toks = serving.generate(params, cfg, prompt, 4, max_len=16)
+    assert toks.shape == (2, 4)
+
+
+def test_prompt_exceeding_global_cache_is_an_error():
+    cfg = _f32("llama3-8b")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                                cfg.vocab)
+    with pytest.raises(ValueError, match="exceeds cache size"):
+        serving.prefill_into_cache(params, cfg, tokens, max_len=8)
+
+
+# ----------------------------------------------------------------------
+# serve CLI: tensor-parallel token parity (ISSUE acceptance)
+# ----------------------------------------------------------------------
+def _run_serve(args, devices=8, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve"] + args,
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-2000:]}"
+    return r.stdout
+
+
+def test_serve_tp2_tokens_identical_to_tp1(tmp_path):
+    base = ["--arch", "llama3-8b", "--smoke", "--batch", "4",
+            "--prompt-len", "16", "--gen", "32", "--seed", "0", "--f32"]
+    t1 = str(tmp_path / "tp1.json")
+    t2 = str(tmp_path / "tp2.json")
+    _run_serve(base + ["--tp", "1", "--tokens-out", t1])
+    out = _run_serve(base + ["--tp", "2", "--tokens-out", t2])
+    assert "tp=2" in out and "bulk-prefill" in out
+    tok1 = json.load(open(t1))["tokens"]
+    tok2 = json.load(open(t2))["tokens"]
+    assert tok1 == tok2
+    assert np.asarray(tok1).shape == (4, 32)

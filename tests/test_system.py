@@ -1,13 +1,14 @@
 """End-to-end system tests: the training driver as a black box —
-checkpoint/restart continuity, JNCSS planning, straggler tolerance,
-and the dry-run machinery (HLO analyzer units)."""
+checkpoint/restart continuity, JNCSS planning, straggler tolerance.
+
+This suite deliberately touches NOTHING but the CLI mains (the
+import-lint step enforces it); the launch-layer unit tests live in
+test_launch_units.py."""
 import json
 import os
 import subprocess
 import sys
 
-import numpy as np
-import pytest
 
 
 def _run_train(args, timeout=420):
@@ -48,89 +49,3 @@ def test_train_driver_jncss_scheme(tmp_path):
     ])
     assert "JNCSS chose" in out
     assert "done: 4 steps" in out
-
-
-# ----------------------------------------------------------------------
-# HLO analyzer units (the §Roofline profiler)
-# ----------------------------------------------------------------------
-_HLO = """
-HloModule test
-
-%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
-  %p = (s32[], f32[8,8]) parameter(0)
-  %i = s32[] get-tuple-element(%p), index=0
-  %x = f32[8,8] get-tuple-element(%p), index=1
-  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
-  %ar = f32[8,8] all-reduce(%d), replica_groups={{0,1}}, to_apply=%add9
-  %one = s32[] constant(1)
-  %ni = s32[] add(%i, %one)
-  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
-}
-
-%cond (p2: (s32[], f32[8,8])) -> pred[] {
-  %p2 = (s32[], f32[8,8]) parameter(0)
-  %i2 = s32[] get-tuple-element(%p2), index=0
-  %n = s32[] constant(5)
-  ROOT %lt = pred[] compare(%i2, %n), direction=LT
-}
-
-%add9 (a: f32[], b: f32[]) -> f32[] {
-  %a = f32[] parameter(0)
-  %b = f32[] parameter(1)
-  ROOT %s = f32[] add(%a, %b)
-}
-
-ENTRY %main (arg: f32[8,8]) -> f32[8,8] {
-  %arg = f32[8,8] parameter(0)
-  %init = s32[] constant(0)
-  %tup = (s32[], f32[8,8]) tuple(%init, %arg)
-  %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
-  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
-}
-"""
-
-
-def test_hlo_analyzer_trip_count_multiplication():
-    from repro.launch import hlo_analysis as H
-
-    c = H.analyze(_HLO, pod_stride=10**9)
-    # one 8×8×8 dot per iteration × 5 trips = 5 · 2 · 8³ flops
-    assert c.flops == pytest.approx(5 * 2 * 8**3 + 5, rel=0.2)
-    ar = c.coll["all-reduce"]
-    assert ar["count"] == 5
-    assert ar["operand_bytes"] == 5 * 8 * 8 * 4
-    assert ar["link_bytes"] == 2 * 5 * 8 * 8 * 4
-    # bf16eq counts the f32 all-reduce at 2 bytes
-    assert ar["link_bytes_bf16eq"] == 2 * 5 * 8 * 8 * 2
-
-
-def test_hlo_analyzer_collective_classification():
-    from repro.launch import hlo_analysis as H
-
-    # groups within one pod (stride < 256)
-    assert not H._classify_groups(
-        "all-reduce(), replica_groups={{0,1,2,3}}", 256)
-    # groups spanning pods
-    assert H._classify_groups(
-        "all-reduce(), replica_groups={{0,256}}", 256)
-
-
-def test_input_specs_cover_all_cells():
-    """input_specs returns well-formed abstract inputs for all 40 cells."""
-    from repro.configs.base import SHAPES
-    from repro.configs.registry import ARCH_IDS, get_config, shape_applicable
-    from repro.launch.steps import input_specs
-
-    n = 0
-    for a in ARCH_IDS:
-        cfg = get_config(a)
-        for s in SHAPES.values():
-            ok, _ = shape_applicable(cfg, s)
-            if not ok:
-                continue
-            specs = input_specs(cfg, s)
-            assert specs, (a, s.name)
-            for v in specs.values():
-                assert all(d > 0 for d in v.shape)
-            n += 1
-    assert n == 32  # 40 − 8 skipped long_500k cells

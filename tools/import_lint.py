@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Import lint: the public-API boundary, enforced.
+
+Rules (AST-level, no code execution):
+
+  * ``examples/*.py`` may import from ``repro`` ONLY the public surface:
+    ``repro.api`` (and submodules), ``repro.configs.*``, ``repro.data.*``.
+  * ``tests/test_system.py`` (the black-box driver suite) must not
+    import ``repro.launch`` internals — the CLI ``main`` entry points
+    (``repro.launch.{train,serve,dryrun}.main``) are the only exception.
+
+Exit 1 with a per-violation listing when the boundary leaks.
+Run: python tools/import_lint.py   (from the repo root)
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+EXAMPLE_ALLOWED_PREFIXES = ("repro.api", "repro.configs", "repro.data")
+CLI_MAINS = {"repro.launch.train", "repro.launch.serve",
+             "repro.launch.dryrun"}
+
+
+def _imports(path: Path):
+    """Yield (module, names, lineno) for every import in the file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                yield a.name, None, node.lineno
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            yield (node.module or "",
+                   [a.name for a in node.names], node.lineno)
+
+
+def _is_allowed_example(mod: str) -> bool:
+    if not (mod == "repro" or mod.startswith("repro.")):
+        return True  # stdlib / third-party
+    return any(mod == p or mod.startswith(p + ".")
+               for p in EXAMPLE_ALLOWED_PREFIXES)
+
+
+def _is_allowed_system_test(mod: str, names) -> bool:
+    if not mod.startswith("repro.launch"):
+        return True
+    # `from repro.launch.train import main` — the CLI seam — is fine;
+    # anything else (steps, hlo_analysis, mesh, …) is an internal leak.
+    return mod in CLI_MAINS and names is not None and \
+        set(names) <= {"main"}
+
+
+def lint() -> int:
+    violations = []
+    for path in sorted((REPO / "examples").glob("*.py")):
+        for mod, names, lineno in _imports(path):
+            if not _is_allowed_example(mod):
+                violations.append(
+                    f"{path.relative_to(REPO)}:{lineno}: imports "
+                    f"{mod!r} — examples may only use "
+                    f"{', '.join(EXAMPLE_ALLOWED_PREFIXES)}"
+                )
+    sys_test = REPO / "tests" / "test_system.py"
+    if sys_test.exists():
+        for mod, names, lineno in _imports(sys_test):
+            if not _is_allowed_system_test(mod, names):
+                violations.append(
+                    f"{sys_test.relative_to(REPO)}:{lineno}: imports "
+                    f"{mod!r} — the black-box suite may only touch the "
+                    f"CLI mains of repro.launch"
+                )
+    if violations:
+        print("import-lint: the public-API boundary leaks:")
+        for v in violations:
+            print(" ", v)
+        return 1
+    print("import-lint: OK (examples + test_system stay on repro.api)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(lint())
