@@ -1,0 +1,146 @@
+"""Sequence-parallel train-step probe — activation memory + step time.
+
+Measures ``steps.make_dist_train_step`` with ``seq_shard_activations``
+on vs off (the TP baseline) on the 8-device (pod=2, data=2, model=2)
+test mesh, using a deepened llama3-family smoke config (flash attention
++ ``save_block_outputs`` remat) where the remat-saved block outputs —
+the buffers SP shrinks by tp× — dominate the live set.  Records both
+step times and both compiled temp footprints
+(``Compiled.memory_analysis().temp_size_in_bytes`` — the per-device
+activation/workspace bytes of the step):
+
+  * ``act_ratio = act_bytes_tp / act_bytes_sp`` must stay ≥ ~1.5 at
+    tp=2 (the point of sequence parallelism),
+  * ``us_per_step`` (the SP step) is the timed key CI's
+    ``check_regression`` gates against
+    ``benchmarks/baselines/BENCH_trainstep_sp.json``.
+
+Like the TP probe, the measurement runs in a child process so the
+forced host-device count precedes jax initialization; the parent emits
+the CSV row and, when ``BENCH_TRAINSTEP_SP_OUT`` is set
+(``benchmarks.run --quick``), the JSON record.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD_FLAG = "--child"
+
+
+def _child() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import FAST, timeit
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.mesh import make_test_mesh
+    from repro.launch import steps as steps_lib
+    from repro.models import transformer as tf
+    from repro.optim import make_optimizer
+
+    B, S = (8, 512) if FAST else (8, 1024)
+    cfg = dataclasses.replace(
+        get_smoke_config("llama3-8b"),
+        n_layers=16, d_model=128, d_ff=256, head_dim=32,
+        flash=True, remat_policy="save_block_outputs",
+    )
+    optimizer = make_optimizer("sgd")
+    mesh = make_test_mesh(2, 2, 2)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = optimizer.init(params)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "targets": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "weights": jnp.ones((B, S), jnp.float32),
+        "denom": jnp.float32(B * S),
+    }
+    lam = jnp.full((2, 2), 0.25, jnp.float32)
+
+    def measure(seq_shard: bool):
+        # grad_clip off: clipping adds a params-sized f32 workspace to
+        # both regimes and only dilutes the activation-bytes signal
+        tcfg = TrainConfig(
+            optimizer="sgd", lr=1e-2, total_steps=100, warmup_steps=10,
+            grad_clip=0.0, seq_shard_activations=seq_shard,
+        )
+        step_fn = jax.jit(steps_lib._make_dist_train_step(
+            cfg, tcfg, mesh, optimizer=optimizer))
+        compiled = step_fn.lower(
+            params, opt_state, batch, lam, {}, jnp.asarray(0)
+        ).compile()
+        ma = compiled.memory_analysis()
+        temp = int(ma.temp_size_in_bytes) if ma is not None else 0
+
+        def run():
+            _, _, _, metrics = step_fn(
+                params, opt_state, batch, lam, {}, jnp.asarray(0)
+            )
+            jax.block_until_ready(metrics["loss"])
+
+        us = min(timeit(run, repeats=3 if FAST else 5) for _ in range(2))
+        return us, temp
+
+    tp_us, tp_bytes = measure(seq_shard=False)
+    sp_us, sp_bytes = measure(seq_shard=True)
+    print(json.dumps({
+        "name": "trainstep_sp_smoke",
+        "us_per_step": sp_us,
+        "tp_us_per_step": tp_us,
+        "act_bytes_sp": sp_bytes,
+        "act_bytes_tp": tp_bytes,
+        "act_ratio": (tp_bytes / sp_bytes) if sp_bytes else 0.0,
+        "batch": B,
+        "seq_len": S,
+        "mesh": "pod=2,data=2,model=2",
+    }))
+
+
+def main() -> None:
+    if _CHILD_FLAG in sys.argv:
+        _child()
+        return
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_trainstep_sp", _CHILD_FLAG],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"SP train-step probe failed:\n{r.stderr[-2000:]}"
+        )
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    # the point of SP: check_regression only gates the timed keys, so
+    # the activation-byte win (a deterministic compile-time metric —
+    # ~1.5x at tp=2) is asserted here; a silently-disabled seq_shard
+    # path must fail the probe, not ship green
+    if rec["act_bytes_sp"] and rec["act_ratio"] < 1.4:
+        raise RuntimeError(
+            f"SP activation-memory win regressed: act_ratio="
+            f"{rec['act_ratio']:.2f}x (TP {rec['act_bytes_tp']} B vs "
+            f"SP {rec['act_bytes_sp']} B), expected >= 1.4x"
+        )
+    print(f"{rec['name']},{rec['us_per_step']:.1f},"
+          f"tp={rec['tp_us_per_step']:.1f}us "
+          f"act_ratio={rec['act_ratio']:.2f}x "
+          f"B{rec['batch']}xS{rec['seq_len']}@{rec['mesh']}")
+    out = os.environ.get("BENCH_TRAINSTEP_SP_OUT", "")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.bench_fig56_accuracy",    # Figs. 5 & 6
     "benchmarks.bench_trainstep",         # CI regression probe
     "benchmarks.bench_trainstep_tp",      # CI regression probe (dist TP)
+    "benchmarks.bench_trainstep_sp",      # CI regression probe (seq-par)
 ]
 
 QUICK_MODULES = [
@@ -35,6 +36,7 @@ QUICK_MODULES = [
     "benchmarks.bench_jncss",
     "benchmarks.bench_trainstep",
     "benchmarks.bench_trainstep_tp",
+    "benchmarks.bench_trainstep_sp",
 ]
 
 
@@ -52,6 +54,7 @@ def main(argv=None) -> None:
         os.environ["BENCH_TRAINSTEP_OUT"] = args.out
         root, ext = os.path.splitext(args.out)
         os.environ["BENCH_TRAINSTEP_TP_OUT"] = f"{root}_tp{ext or '.json'}"
+        os.environ["BENCH_TRAINSTEP_SP_OUT"] = f"{root}_sp{ext or '.json'}"
         modules = QUICK_MODULES
     print("name,us_per_call,derived")
     failures = 0

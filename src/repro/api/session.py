@@ -123,6 +123,7 @@ class CodedSession:
         planner: Any = "jncss",
         mode: str = "off",
         tp: int = 1,
+        seq_shard: Optional[bool] = None,
         seq_len: int = 64,
         part_batch: int = 1,
         K: int = 0,
@@ -147,6 +148,16 @@ class CodedSession:
         self.cfg = cfg
         self.mode = mode
         self.tp = max(int(tp), 1)
+        # --seq-shard precedence: an explicit flag (True/False) wins;
+        # None falls back to the TrainConfig-level default.  A config-
+        # level True quietly stays off where SP cannot apply (tp <= 1 /
+        # mode off); an EXPLICIT True there is a flag error instead.
+        self._seq_shard_explicit = seq_shard is not None
+        self.seq_shard = bool(
+            seq_shard if seq_shard is not None
+            else TrainConfig.__dataclass_fields__[
+                "seq_shard_activations"].default
+        )
         self.seq_len = seq_len
         self.part_batch = part_batch
         self.seed = seed
@@ -203,6 +214,7 @@ class CodedSession:
             dist_mode=mode,
             grad_compression="int8" if mode == "coded_int8" else "none",
             grad_compression_block=grad_block,
+            seq_shard_activations=self.seq_shard,
         )
 
         # ---- data: one resumable stream per dataset part -------------
@@ -313,6 +325,11 @@ class CodedSession:
                     "tp > 1 requires a dist mode (the single-host "
                     "reference loop has no model mesh axis)"
                 )
+            if self.seq_shard and self._seq_shard_explicit:
+                raise ValueError(
+                    "--seq-shard requires a dist mode (sequence "
+                    "sharding rides the 'model' mesh axis)"
+                )
             self.train_step = jax.jit(
                 steps_lib.make_train_step(self.cfg, self.tcfg,
                                           optimizer=self._optimizer)
@@ -334,13 +351,19 @@ class CodedSession:
         self._grad_sync = grad_sync
         pods, data = topo.n, topo.m[0]
         shard_lib.validate_tp(self.cfg, self.tp)
+        if self.seq_shard and (self.tp > 1 or self._seq_shard_explicit):
+            # validate_tp-style clear errors: tp>1 requirement +
+            # seq % tp divisibility (+ the recurrent fallback warning)
+            shard_lib.validate_seq_shard(self.cfg, self.tp, self.seq_len)
         mesh = self._mesh = make_test_mesh(pods, data, self.tp)
         if self.verbose:
             print(f"[train] dist={self.mode}: mesh "
                   f"(pod={pods} × data={data} × "
                   f"model={self.tp}), "
                   f"grad_compression={self.tcfg.grad_compression}"
-                  + (f", TP degree {self.tp}" if self.tp > 1 else ""))
+                  + (f", TP degree {self.tp}" if self.tp > 1 else "")
+                  + (", seq-parallel activations"
+                     if self.seq_shard and self.tp > 1 else ""))
 
         param_sh, opt_sh = shard_lib.state_shardings(
             self.params, self.opt_state, self.cfg, mesh,

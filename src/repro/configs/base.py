@@ -208,4 +208,11 @@ class TrainConfig:
     grad_compression: str = "none"  # none | int8 (edge→master hop)
     grad_compression_block: int = 64  # int8 block size on that hop
     fsdp: bool = True  # shard params over the data axis as well
-    seq_shard_activations: bool = False  # SP: shard saved acts over model
+    # sequence parallelism (Megatron SP) inside the dist-TP shard_map:
+    # row-parallel out-projections reduce-scatter over seq, the
+    # norm/residual work between the TP collective pairs runs on the
+    # local 1/tp seq block, column-parallel in-projections re-gather.
+    # Config-level default; the train CLI's --seq-shard/--no-seq-shard
+    # flag (CodedSession ``seq_shard=``) overrides it.  Needs tp > 1
+    # and seq_len % tp == 0 (sharding.validate_seq_shard).
+    seq_shard_activations: bool = False

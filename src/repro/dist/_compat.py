@@ -30,4 +30,16 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
     )
 
 
-__all__ = ["shard_map"]
+def on_tpu() -> bool:
+    """Whether the default jax backend is a TPU.
+
+    The one place the ``use_pallas`` defaults come from: the Pallas
+    ``coded_combine`` kernel runs compiled on TPU and interpret-mode
+    everywhere else, so every caller gates on this same predicate.
+    """
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+__all__ = ["on_tpu", "shard_map"]

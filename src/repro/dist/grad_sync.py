@@ -27,7 +27,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.dist._compat import shard_map
+from repro.dist._compat import on_tpu, shard_map
 
 from repro.dist import compression
 from repro.kernels import ops as kernel_ops
@@ -116,7 +116,7 @@ def compressed_coded_psum(
     """
     pod_axis, worker_axis = axes
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        use_pallas = on_tpu()
     lam = jnp.asarray(lam)
 
     def leaf(x, r):
@@ -200,7 +200,7 @@ def make_compressed_cross_pod_sum(
     """
     pod_axis, worker_axis = axes
     n_pods = mesh.shape[pod_axis]
-    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = on_tpu()
 
     def inner(tree, lam_block):
         lam = lam_block.reshape(())
@@ -214,7 +214,7 @@ def make_compressed_cross_pod_sum(
             ss = lax.all_gather(scales, pod_axis)  # (n, nb)
             ones = jnp.ones((1, n_pods), jnp.float32)
             out = kernel_ops.combine_q(
-                ones, qs, ss, block=block, use_pallas=on_tpu
+                ones, qs, ss, block=block, use_pallas=use_pallas
             )[0]
             return out[: y.size].reshape(y.shape)
 

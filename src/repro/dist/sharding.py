@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -61,16 +62,43 @@ class ShardCtx:
     All sharded/replicated decisions the model code makes from ctx are
     *static* (local-vs-global shape comparisons at trace time), so a
     single compiled executable serves every runtime straggler pattern.
+
+    ``seq_shard`` adds the sequence-parallel regime (Megatron SP):
+    between a row-parallel out-projection and the next column-parallel
+    in-projection the activations live sharded along the *sequence*
+    axis over ``model_axis`` — the row-parallel matmul finishes with a
+    reduce-scatter (:meth:`psum_scatter`) instead of a full all-reduce,
+    the norm/residual work in between runs on the local seq block
+    (1/tp the activation bytes), and the in-projection re-gathers
+    (:meth:`gather_seq`).  Collective bytes are identical (a ring
+    all-reduce IS reduce-scatter + all-gather); only the live
+    activation state shrinks.  The local-vs-global seq length is a
+    static trace-time property of each array (``S_local = S // tp``),
+    so SP preserves the one-executable / runtime-λ contract.
     """
 
     model_axis: str = MODEL_AXIS
     data_axes: Tuple[str, ...] = (POD_AXIS, DATA_AXIS)
     tp: int = 1
     inside_shard_map: bool = False
+    seq_shard: bool = False
 
     @property
     def active(self) -> bool:
         return self.inside_shard_map and self.tp > 1
+
+    @property
+    def sp(self) -> bool:
+        """Sequence-parallel regime on (TP active + seq sharding)."""
+        return self.active and self.seq_shard
+
+    def no_sp(self) -> "ShardCtx":
+        """Context with sequence sharding off — for sub-stacks whose
+        seq axis must stay whole (the whisper encoder: ``enc_len``
+        need not divide tp, and cross-attention wants full K/V)."""
+        if not self.seq_shard:
+            return self
+        return dataclasses.replace(self, seq_shard=False)
 
     def psum(self, x):
         """Finish a row-parallel matmul (partial sums → full value)."""
@@ -96,6 +124,52 @@ class ShardCtx:
             x, self.model_axis, axis=axis % x.ndim, tiled=True
         )
 
+    # ---- sequence-parallel helpers -----------------------------------
+    def _seq_check(self, x, axis: int) -> int:
+        if x.shape[axis] % self.tp:
+            raise ValueError(
+                f"sequence parallelism needs the seq dim (axis {axis}, "
+                f"size {x.shape[axis]}) divisible by tp={self.tp}"
+            )
+        return x.shape[axis] // self.tp
+
+    def gather_seq(self, x, axis: int = 1):
+        """Local seq block → full sequence (all_gather over model).
+
+        The start of every column-parallel in-projection region under
+        SP; a no-op otherwise (``x`` is already full-length)."""
+        if not self.sp:
+            return x
+        return lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def scatter_seq(self, x, axis: int = 1):
+        """Full-sequence *replicated* value → this shard's seq block.
+
+        For values that are already complete on every shard (embedding
+        output, an unsharded sublayer's result) — a static slice, no
+        collective.  Partial sums must use :meth:`psum_scatter`."""
+        if not self.sp:
+            return x
+        local = self._seq_check(x, axis)
+        start = self.axis_index() * local
+        return lax.dynamic_slice_in_dim(x, start, local, axis=axis)
+
+    def psum_scatter(self, x, axis: int = 1):
+        """Finish a row-parallel matmul.
+
+        Plain TP: full all-reduce (== :meth:`psum`).  SP: reduce-
+        scatter over the seq axis — same link bytes as the all-reduce,
+        but the result (and everything until the next
+        :meth:`gather_seq`) holds only the local seq block."""
+        if not self.active:
+            return x
+        if not self.seq_shard:
+            return lax.psum(x, self.model_axis)
+        self._seq_check(x, axis)
+        return lax.psum_scatter(
+            x, self.model_axis, scatter_dimension=axis, tiled=True
+        )
+
     def local_block(self, v, local: int, axis: int = -1):
         """This shard's feature block of a replicated array.
 
@@ -112,14 +186,20 @@ class ShardCtx:
 NULL_CTX = ShardCtx()
 
 
-def make_shard_ctx(mesh: Mesh) -> ShardCtx:
-    """ShardCtx for code running inside a shard_map region on ``mesh``."""
+def make_shard_ctx(mesh: Mesh, *, seq_shard: bool = False) -> ShardCtx:
+    """ShardCtx for code running inside a shard_map region on ``mesh``.
+
+    ``seq_shard`` turns on the sequence-parallel regime (activations
+    seq-sharded over "model" between the TP collective pairs); it only
+    takes effect when the mesh has a model axis of size > 1.
+    """
     tp = int(mesh.shape.get(MODEL_AXIS, 1))
     return ShardCtx(
         model_axis=MODEL_AXIS,
         data_axes=dp_axes(mesh),
         tp=tp,
         inside_shard_map=True,
+        seq_shard=seq_shard,
     )
 
 
@@ -158,6 +238,24 @@ def model_sharded_mask(pspecs: PyTree) -> PyTree:
         return False
 
     return jax.tree.map(one, pspecs, is_leaf=_IS_SPEC)
+
+
+def seq_sharded_mask(pspecs: PyTree) -> PyTree:
+    """Per-leaf gradient-correction mask of the sequence-parallel step.
+
+    Same projection as :func:`model_sharded_mask` — and deliberately
+    so: under SP the forward consumes replicated leaves (norm scales,
+    biases, per-head vectors) on the LOCAL seq block only, so their
+    per-shard grads are *seq-block partials* and the psum over "model"
+    is load-bearing (it completes the token sum) rather than an
+    average of redundant copies; but the *set* of leaves needing that
+    psum is exactly the non-model-sharded ones, and the /tp factor
+    from differentiating the model-replicated objective is unchanged.
+    Kept as its own name so the SP step states which regime it
+    corrects for (and so the rule can diverge without touching call
+    sites if an SP-only layout ever needs it to).
+    """
+    return model_sharded_mask(pspecs)
 
 
 def validate_tp(cfg, tp: int) -> None:
@@ -202,6 +300,37 @@ def validate_tp(cfg, tp: int) -> None:
         raise ValueError(
             f"{cfg.name}: tensor parallelism tp={tp} violates "
             f"divisibility constraints: " + "; ".join(errs)
+        )
+
+
+def validate_seq_shard(cfg, tp: int, seq_len: int) -> None:
+    """Clear error (instead of a shape crash) for a bad ``--seq-shard``.
+
+    Sequence parallelism scatters the (B, S, d) activations over the
+    model axis between the TP collective pairs, so S must divide the
+    TP degree.  Recurrent kinds (Mamba-2 SSD / RG-LRU) are legal but
+    their scan is sequential in seq — those blocks gather the full
+    sequence before scanning (only the norm/residual/projection work
+    between blocks shards), which a warning makes explicit.
+    """
+    if tp <= 1:
+        raise ValueError(
+            f"{cfg.name}: --seq-shard requires tensor parallelism "
+            f"(tp={tp}); sequence sharding rides the 'model' mesh axis"
+        )
+    if seq_len % tp:
+        raise ValueError(
+            f"{cfg.name}: sequence parallelism needs the sequence "
+            f"length divisible by tp: seq_len={seq_len} % tp={tp} != 0"
+        )
+    rec = set(cfg.block_pattern) & {"ssm", "recurrent"}
+    if rec:
+        warnings.warn(
+            f"{cfg.name}: {sorted(rec)} blocks scan sequentially over "
+            f"seq — sequence parallelism falls back to "
+            f"gather-before-scan there (norm/residual/projection work "
+            f"between blocks still shards)",
+            stacklevel=2,
         )
 
 
@@ -593,23 +722,28 @@ class _ActCtx:
     mesh: Mesh
     dp: Tuple[str, ...]
     tp: bool
+    seq: bool = False
 
 
 _ACT_CTX: Optional[_ActCtx] = None
 
 
 @contextlib.contextmanager
-def activation_sharding(mesh: Mesh, dp=None, tp: bool = True):
+def activation_sharding(mesh: Mesh, dp=None, tp: bool = True,
+                        seq: bool = False):
     """Enable the activation anchors for code traced inside this block.
 
     ``dp``: batch axes override (``dp_only`` passes ALL mesh axes so the
     model axis carries extra batch shards); default (pod, data).
     ``tp``: whether anchors pin the feature dim to "model".
+    ``seq``: sequence-parallel layout instead — anchors pin the seq dim
+    (axis 1) to "model" and leave the feature dim whole, the GSPMD
+    counterpart of the ShardCtx ``seq_shard`` regime.
     """
     global _ACT_CTX
     prev = _ACT_CTX
     axes = tuple(dp) if dp is not None else dp_axes(mesh)
-    _ACT_CTX = _ActCtx(mesh=mesh, dp=axes, tp=tp)
+    _ACT_CTX = _ActCtx(mesh=mesh, dp=axes, tp=tp and not seq, seq=seq)
     try:
         yield
     finally:
@@ -632,7 +766,9 @@ def anchor_activations(x):
     ent = [None] * x.ndim
     if x.ndim >= 1:
         ent[0] = ctx.dp
-    if ctx.tp and x.ndim >= 2:
+    if ctx.seq and x.ndim >= 3:
+        ent[1] = MODEL_AXIS  # sequence-parallel: seq over model
+    elif ctx.tp and x.ndim >= 2:
         ent[-1] = MODEL_AXIS
     return _constrain(x, P(*ent))
 

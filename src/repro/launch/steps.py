@@ -211,10 +211,19 @@ def _make_dist_train_step(
     depend on the straggler pattern); the two-stage psum then runs
     unweighted.
 
+    ``tcfg.seq_shard_activations`` turns on sequence parallelism
+    through the same ShardCtx seam: between a row-parallel
+    reduce-scatter and the next column-parallel all_gather the
+    activations (and the remat-saved block outputs) hold only the
+    local 1/tp seq block — identical collective bytes, tp× less
+    activation state.  The gradient correction then applies against
+    :func:`sharding.seq_sharded_mask` (the replicated-leaf psum is
+    load-bearing there: per-shard grads are seq-block partials).
+
     λ arrives as a runtime (pods, data) operand, so straggler drops and
-    elastic replans at fixed (tolerance, K) never recompile — TP adds
-    only static shape specialization, never λ-dependent shapes.  The
-    microbatched accumulation of :func:`make_train_step` is not
+    elastic replans at fixed (tolerance, K) never recompile — TP and
+    SP add only static shape specialization, never λ-dependent shapes.
+    The microbatched accumulation of :func:`make_train_step` is not
     replicated here: the per-group batch is already 1/(n·m) of the
     global batch.
     """
@@ -232,7 +241,9 @@ def _make_dist_train_step(
     n_groups = n_pods * mesh.shape[data_axis]
     compressed = tcfg.grad_compression == "int8"
 
-    ctx = shard_lib.make_shard_ctx(mesh)
+    ctx = shard_lib.make_shard_ctx(
+        mesh, seq_shard=tcfg.seq_shard_activations
+    )
     tp = ctx.tp
     if tp > 1:
         shard_lib.validate_tp(cfg, tp)
@@ -246,7 +257,10 @@ def _make_dist_train_step(
         params_abs, mesh,
     )
     param_specs = shard_lib.model_axis_only(pspecs)
-    tp_mask = shard_lib.model_sharded_mask(pspecs)
+    # SP makes per-shard grads of replicated leaves seq-block partials;
+    # the mask tells tp_correct which leaves need the completing psum
+    tp_mask = (shard_lib.seq_sharded_mask(pspecs) if ctx.sp
+               else shard_lib.model_sharded_mask(pspecs))
     res_spec_tree = jax.tree.map(
         lambda s: P(pod_axis, *tuple(s)), param_specs,
         is_leaf=lambda x: isinstance(x, P),

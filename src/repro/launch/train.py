@@ -103,6 +103,22 @@ def main(argv=None):
                          "--model-shards).  Validated against the arch "
                          "config's divisibility constraints up front — "
                          "a clear error instead of a shape crash")
+    ap.add_argument("--seq-shard", dest="seq_shard",
+                    action="store_const", const=True, default=None,
+                    help="sequence parallelism inside the dist-TP "
+                         "shard_map: activations between the TP "
+                         "collective pairs shard over 'model' along "
+                         "seq (reduce-scatter/all-gather instead of "
+                         "all-reduce — tp x less activation state at "
+                         "identical collective bytes).  Needs --tp > 1 "
+                         "and seq-len divisible by tp; composes with "
+                         "--dist coded_int8.  Default: the "
+                         "TrainConfig.seq_shard_activations config "
+                         "value")
+    ap.add_argument("--no-seq-shard", dest="seq_shard",
+                    action="store_const", const=False,
+                    help="force sequence parallelism off (overrides "
+                         "the config-level default)")
     ap.add_argument("--grad-block", type=int, default=64,
                     help="int8 block size on the edge→master hop")
     ap.add_argument("--checkpoint-dir", default="")
@@ -140,6 +156,7 @@ def main(argv=None):
             planner=planner_for_scheme(args.scheme, args.s_e, args.s_w),
             mode=args.dist,
             tp=tp,
+            seq_shard=args.seq_shard,
             seq_len=args.seq_len,
             part_batch=args.part_batch,
             K=args.K,

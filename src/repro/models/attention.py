@@ -13,6 +13,13 @@ sequences the query axis is additionally chunked with ``lax.map`` so the
 largest live score block is (B, Cq, H, Ck) — this is what makes 32k
 prefill fit per-chip HBM in the dry-run without a Pallas dependency on
 the CPU backend.
+
+Everything here is sequence-length agnostic and always sees the FULL
+sequence: under sequence parallelism (``ShardCtx.seq_shard``) the
+caller (`transformer._attn_apply`) re-gathers the seq-sharded residual
+stream before projecting Q/K/V — attention mixes all positions — and
+reduce-scatters after the out-projection, so no function in this
+module needs to know about the SP regime.
 """
 from __future__ import annotations
 

@@ -51,7 +51,15 @@ def moe_ffn(
     shared_width: Optional[int] = None,  # global n_shared·ff (TP detect)
     n_experts: Optional[int] = None,     # global E (TP detect)
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (output (B,S,d), load-balancing aux loss scalar)."""
+    """Returns (output (B,S,d), load-balancing aux loss scalar).
+
+    SP (ctx.sp): ``x`` arrives as the local seq block; the layer
+    gathers the full sequence ONCE up front — routing, the router
+    logits and the load-balancing aux statistics all need every token
+    (the aux loss must stay identical across shards) — and the final
+    combine reduce-scatters back to the local seq block.
+    """
+    x = ctx.gather_seq(x)
     B, S, d = x.shape
     N = B * S
     xf = x.reshape(N, d)
@@ -128,19 +136,24 @@ def moe_ffn(
         sh = sh @ params["ws_d"]
         sh_sharded = (ctx.active and shared_width is not None
                       and params["ws_g"].shape[-1] != shared_width)
-    # combine with a single psum over the model axis: partial terms
-    # (sharded experts / column-row-parallel shared branch) sum inside,
-    # replicated terms stay outside
-    partial = [t for t, p in ((y, experts_sharded), (sh, sh_sharded)) if p]
-    full = [t for t, p in ((y, experts_sharded), (sh, sh_sharded))
+    # combine with a single collective over the model axis: partial
+    # terms (sharded experts / column-row-parallel shared branch) sum
+    # inside, replicated terms stay outside.  Under SP the psum becomes
+    # a reduce-scatter over seq and replicated terms slice their local
+    # seq block — combine at (B, S, d) so the seq axis is addressable.
+    partial = [t.reshape(B, S, d)
+               for t, p in ((y, experts_sharded), (sh, sh_sharded)) if p]
+    full = [t.reshape(B, S, d)
+            for t, p in ((y, experts_sharded), (sh, sh_sharded))
             if t is not None and not p]
     if partial:
-        terms = [ctx.psum(partial[0] if len(partial) == 1
-                          else partial[0] + partial[1])] + full
+        terms = [ctx.psum_scatter(partial[0] if len(partial) == 1
+                                  else partial[0] + partial[1])]
+        terms += [ctx.scatter_seq(t) for t in full]
     else:
-        terms = full
+        terms = [ctx.scatter_seq(t) for t in full]
     y = terms[0] if len(terms) == 1 else terms[0] + terms[1]
-    return y.reshape(B, S, d).astype(x.dtype), aux
+    return y.astype(x.dtype), aux
 
 
 def moe_ffn_reference(params, x, top_k):

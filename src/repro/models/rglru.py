@@ -118,7 +118,12 @@ def rglru_block_forward(params, x: jnp.ndarray, cfg,
 
     TP: gate/lin branches are column-parallel over the recurrence
     width, ``w_out`` row-parallel (psum restores the full d output).
+    SP (ctx.sp): the linear recurrence is sequential in seq — the
+    block gathers the full sequence before the scan (ctx-driven
+    fallback, like the SSD block) and the row-parallel ``w_out``
+    reduce-scatters back to the local seq block.
     """
+    x = ctx.gather_seq(x)  # gather-before-scan: the scan needs all of S
     gate = jax.nn.gelu(x @ params["w_gate"])
     y = x @ params["w_lin"]
     r_local = y.shape[-1]
@@ -128,7 +133,9 @@ def rglru_block_forward(params, x: jnp.ndarray, cfg,
     out = (gate * h) @ params["w_out"]
     if ctx.active and params["w_out"].shape[0] != (cfg.lru_width
                                                   or cfg.d_model):
-        out = ctx.psum(out)
+        out = ctx.psum_scatter(out)  # row-parallel out-projection
+    else:
+        out = ctx.scatter_seq(out)
     return out
 
 

@@ -173,7 +173,15 @@ def ssm_forward(
     cfg,
     ctx=NULL_CTX,
 ) -> jnp.ndarray:
-    """Full-sequence Mamba-2 block (train / prefill)."""
+    """Full-sequence Mamba-2 block (train / prefill).
+
+    SP (ctx.sp): the SSD recurrence is sequential in seq, so the block
+    cannot keep the sequence sharded through the scan — it gathers the
+    full sequence up front (the ctx-driven fallback) and the
+    row-parallel out-projection reduce-scatters back to the local seq
+    block; only the norm/residual work *between* blocks shards.
+    """
+    x = ctx.gather_seq(x)  # gather-before-scan: the scan needs all of S
     hd = cfg.ssm_head_dim
     z = x @ params["zproj"]      # (B, S, di_local)
     xs = x @ params["xproj"]     # (B, S, di_local)
@@ -200,7 +208,9 @@ def ssm_forward(
     y = y * jax.nn.silu(z)  # gated
     out = y @ params["out_proj"]
     if ctx.active and params["out_proj"].shape[0] != cfg.expand * cfg.d_model:
-        out = ctx.psum(out)  # row-parallel out-projection
+        out = ctx.psum_scatter(out)  # row-parallel out-projection
+    else:
+        out = ctx.scatter_seq(out)  # unsharded heads: back to seq block
     return out
 
 

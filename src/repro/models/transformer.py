@@ -212,7 +212,11 @@ def _attn_apply(
     TP (ctx active): in-projections are column-parallel (this shard's
     head block — K/V replicate when n_kv_heads doesn't divide tp), the
     out-projection is row-parallel, finished by one psum over "model".
+    SP (ctx.sp): ``x`` arrives as the local seq block — attention mixes
+    the whole sequence, so the block re-gathers seq up front and the
+    row-parallel finish reduce-scatters back to the local block.
     """
+    x = ctx.gather_seq(x)
     B, S, d = x.shape
     Dh = cfg.head_dim
     H, Kv = attn_lib.local_head_counts(p, Dh)
@@ -269,12 +273,17 @@ def _attn_apply(
         )
     out = out.reshape(B, S, H * Dh) @ p["wo"]
     if ctx.active and H != cfg.n_heads:
-        out = ctx.psum(out)  # row-parallel out-projection
+        out = ctx.psum_scatter(out)  # row-parallel out-projection
+    else:
+        out = ctx.scatter_seq(out)  # unsharded attn: back to seq block
     return out, kv
 
 
 def _mlp_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
                ctx: ShardCtx = NULL_CTX):
+    # SP: the column-parallel up-projections want the full sequence
+    # (each shard computes its ff block over every token)
+    x = ctx.gather_seq(x)
     if cfg.mlp == "swiglu" and "wg" in p:
         out = (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
         sharded = p["wd"].shape[0] != (cfg.d_ff_dense or cfg.d_ff)
@@ -282,7 +291,9 @@ def _mlp_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
         out = jax.nn.gelu(x @ p["w1"]) @ p["w2"]
         sharded = p["w2"].shape[0] != (cfg.d_ff_dense or cfg.d_ff)
     if ctx.active and sharded:
-        out = ctx.psum(out)  # row-parallel down-projection
+        out = ctx.psum_scatter(out)  # row-parallel down-projection
+    else:
+        out = ctx.scatter_seq(out)
     return out
 
 
@@ -405,6 +416,10 @@ def _matmul_f32(x, w, cfg):
 
 def _unembed(params, cfg, x, ctx: ShardCtx = NULL_CTX):
     x = _norm(params["final_norm"], x)
+    # SP: the final norm ran on the local seq block; the vocab-parallel
+    # head wants the full sequence back (the CE decode below then still
+    # spends exactly ONE psum over "model" — the count is unchanged)
+    x = ctx.gather_seq(x)
     if cfg.tie_embeddings:
         w = params["embed"]["table"].T
         if ctx.active and w.shape[0] != cfg.d_model:
@@ -465,8 +480,15 @@ def forward(
     if cfg.is_encdec:
         if enc_frames is None:
             raise ValueError("encoder-decoder model needs enc_frames")
-        enc_out = _run_encoder(params, cfg, enc_frames, ctx)
+        # the encoder stays out of the SP regime: enc_len need not
+        # divide tp and cross-attention consumes the full encoder seq
+        enc_out = _run_encoder(params, cfg, enc_frames, ctx.no_sp())
         enc_pos = jnp.arange(enc_out.shape[1])
+
+    # SP: the residual stream between blocks lives seq-sharded over
+    # "model" — slice after the seq-global embedding/frontend work
+    # (positions stay full-length; blocks gather before attending)
+    x = ctx.scatter_seq(x)
 
     P = len(cfg.block_pattern)
     aux_total = jnp.zeros((), jnp.float32)
@@ -481,7 +503,9 @@ def forward(
                 enc_out, enc_pos, ctx=ctx,
             )
             x = anchor_activations(x)
-            caches[f"p{k}"] = ce
+            # only the prefill path wants K/V back; the loss path must
+            # not stack full-seq cache entries through the scan's ys
+            caches[f"p{k}"] = ce if return_cache else ()
             aux_g = aux_g + aux
         return x, (caches, aux_g)
 
@@ -498,7 +522,11 @@ def forward(
         rest_caches[f"r{k}"] = ce
         aux_total = aux_total + aux
     if last_only:
-        x = x[:, -1:]
+        # the final position lives on the last SP shard — re-gather
+        # first (serve paths run with ctx inactive; this keeps the SP
+        # regime correct for any caller)
+        x = ctx.gather_seq(x)[:, -1:]
+        ctx = ctx.no_sp()
     logits = anchor_logits(_unembed(params, cfg, x, ctx))
     if return_cache:
         cache = {"groups": g_caches, "rest": rest_caches}

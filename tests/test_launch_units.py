@@ -69,6 +69,63 @@ def test_hlo_analyzer_collective_classification():
         "all-reduce(), replica_groups={{0,256}}", 256)
 
 
+# ----------------------------------------------------------------------
+# sequence-parallelism validation (mirrors the validate_tp cases)
+# ----------------------------------------------------------------------
+def test_validate_seq_shard_divisibility():
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.sharding import validate_seq_shard
+
+    cfg = get_smoke_config("llama3-8b")
+    with pytest.raises(ValueError, match="divisible"):
+        validate_seq_shard(cfg, tp=2, seq_len=17)  # 17 % 2 != 0
+    with pytest.raises(ValueError, match="requires tensor parallelism"):
+        validate_seq_shard(cfg, tp=1, seq_len=16)
+    validate_seq_shard(cfg, tp=2, seq_len=16)  # fine, and no warning
+
+
+def test_validate_seq_shard_recurrent_fallback_warns():
+    """SSD / RG-LRU scans are sequential in seq: --seq-shard is legal
+    but falls back to gather-before-scan — the validator says so."""
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.sharding import validate_seq_shard
+
+    for arch in ("mamba2-370m", "recurrentgemma-2b"):
+        with pytest.warns(UserWarning, match="gather-before-scan"):
+            validate_seq_shard(get_smoke_config(arch), tp=2, seq_len=16)
+
+
+def test_seq_shard_flag_overrides_config_default(monkeypatch):
+    """Precedence: explicit CodedSession/CLI flag > TrainConfig-level
+    ``seq_shard_activations`` default."""
+    from repro.api import CodedCluster, CodedSession
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_smoke_config
+
+    cfg = get_smoke_config("llama3-8b")
+    cluster = CodedCluster.homogeneous(2, 2)
+
+    def session(**kw):
+        return CodedSession(cluster, cfg, planner="uniform",
+                            total_steps=2, verbose=False, **kw)
+
+    # no flag → the dataclass default (False) is consumed
+    s = session(mode="off")
+    assert s.tcfg.seq_shard_activations is False
+    # config-level default flipped on → consumed when no flag is given
+    monkeypatch.setattr(
+        TrainConfig.__dataclass_fields__["seq_shard_activations"],
+        "default", True)
+    assert session(mode="off").seq_shard is True  # default applies…
+    # …but an explicit flag wins over the config default
+    s = session(mode="off", seq_shard=False)
+    assert s.tcfg.seq_shard_activations is False
+    # an EXPLICIT --seq-shard without a dist mode is a flag error
+    # (a config-level default in the same spot is quietly inert)
+    with pytest.raises(ValueError, match="dist mode"):
+        session(mode="off", seq_shard=True)
+
+
 def test_input_specs_cover_all_cells():
     """input_specs returns well-formed abstract inputs for all 40 cells."""
     from repro.configs.base import SHAPES

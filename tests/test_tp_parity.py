@@ -18,7 +18,13 @@ sgd step then must produce the same loss and the same updated params
   * MoE expert parallelism + the uniform-weight aux-gradient decode
     (granite-moe, llama4) — these archs previously RAISED in
     make_dist_train_step,
-  * the int8 + error-feedback cross-pod hop under TP (looser tol).
+  * the int8 + error-feedback cross-pod hop under TP (looser tol),
+  * sequence parallelism (``seq_shard_activations``): every arch again
+    with the activations seq-sharded over "model" between the TP
+    collective pairs — row-parallel reduce-scatter, local-seq norms /
+    residuals, column-parallel all-gather, the gather-before-scan
+    fallback of the recurrent stacks, and the seq_sharded_mask
+    gradient correction.
 
 A separate driver test asserts the zero-recompile invariant holds with
 TP on across a forced straggler drop + JNCSS replan.
@@ -72,7 +78,8 @@ _SCRIPT = textwrap.dedent(
         return ({k: jnp.asarray(v) for k, v in quarter.items()},
                 {k: jnp.asarray(v) for k, v in full.items()})
 
-    def run_case(tag, cfg, seed, pods=2, data=2, tp=2, compressed=False):
+    def run_case(tag, cfg, seed, pods=2, data=2, tp=2, compressed=False,
+                 seq_shard=False):
         # fp32 compute: the acceptance criterion is fp32 parity — bf16
         # activations would drown the comparison in cast noise
         cfg = dataclasses.replace(cfg, dtype="float32")
@@ -82,6 +89,7 @@ _SCRIPT = textwrap.dedent(
             optimizer="sgd", lr=0.05, total_steps=10, warmup_steps=1,
             grad_clip=0.0,
             grad_compression="int8" if compressed else "none",
+            seq_shard_activations=seq_shard,
         )
         opt = make_optimizer("sgd")
         params = tf.init_params(jax.random.PRNGKey(0), cfg)
@@ -114,9 +122,17 @@ _SCRIPT = textwrap.dedent(
         print(f"[tp-parity] {tag}: OK (dloss={dl:.2e})", flush=True)
         return dl
 
+    import warnings
+
     n = 0
     for i, arch in enumerate(ARCH_IDS):
         run_case(arch, get_smoke_config(arch), seed=1000 + i)
+        # sequence-parallel regime: same parity bar, activations
+        # seq-sharded between the TP collective pairs (S=16, tp=2)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")  # recurrent SP fallback
+            run_case(arch + "@sp", get_smoke_config(arch),
+                     seed=1000 + i, seq_shard=True)
         n += 1
     # replicated-KV GQA fallback with Kv > 1: tp=4, n_kv_heads=2 — each
     # shard's Q block must slice the ONE KV head of its group
@@ -131,6 +147,9 @@ _SCRIPT = textwrap.dedent(
     # compressed cross-pod hop under TP (error feedback, looser tol)
     run_case("llama3-8b-int8", get_smoke_config("llama3-8b"), seed=2003,
              compressed=True)
+    # sequence parallelism composes with the int8 + EF cross-pod hop
+    run_case("llama3-8b-int8@sp", get_smoke_config("llama3-8b"),
+             seed=2004, compressed=True, seq_shard=True)
     print(f"PARITY_OK {n}")
     """
 )
@@ -177,6 +196,27 @@ def test_tp_zero_recompile_across_drop_and_replan(tmp_path):
     assert r.returncode == 0, \
         f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-2000:]}"
     assert "jit cache entries: 1" in r.stdout
+
+
+def test_sp_zero_recompile_across_drop_and_replan(tmp_path):
+    """Sequence parallelism preserves the one-executable contract:
+    forced straggler drop + JNCSS replan with --seq-shard on — SP adds
+    reduce-scatter/all-gather pairs, never λ-dependent shapes."""
+    r = _run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "llama3-8b", "--smoke", "--scheme", "hgc_jncss",
+         "--cluster", "hetero", "--n-edges", "2", "--n-workers", "4",
+         "--tp", "2", "--seq-shard", "--steps", "4", "--seq-len", "16",
+         "--log-every", "4", "--optimizer", "sgd", "--lr", "0.05",
+         "--replan-every", "3", "--force-drop-edge", "1",
+         "--force-drop-step", "2", "--dist", "coded",
+         "--expect-zero-recompile"],
+        extra_env={"XLA_FLAGS": "--xla_force_host_platform_device_count=16"},
+    )
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-2000:]}"
+    assert "jit cache entries: 1" in r.stdout
+    assert "seq-parallel activations" in r.stdout
 
 
 def test_validate_tp_clear_error():
