@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.bench_extensions",        # Cor. 2 multilayer + partial
     "benchmarks.bench_table1_time_to_acc",  # Table I
     "benchmarks.bench_fig56_accuracy",    # Figs. 5 & 6
+    "benchmarks.bench_pareto",            # planner-family Pareto sweep
     "benchmarks.bench_trainstep",         # CI regression probe
     "benchmarks.bench_trainstep_tp",      # CI regression probe (dist TP)
     "benchmarks.bench_trainstep_sp",      # CI regression probe (seq-par)
@@ -34,6 +35,7 @@ MODULES = [
 QUICK_MODULES = [
     "benchmarks.bench_tradeoff",
     "benchmarks.bench_jncss",
+    "benchmarks.bench_pareto",
     "benchmarks.bench_trainstep",
     "benchmarks.bench_trainstep_tp",
     "benchmarks.bench_trainstep_sp",
@@ -55,6 +57,9 @@ def main(argv=None) -> None:
         root, ext = os.path.splitext(args.out)
         os.environ["BENCH_TRAINSTEP_TP_OUT"] = f"{root}_tp{ext or '.json'}"
         os.environ["BENCH_TRAINSTEP_SP_OUT"] = f"{root}_sp{ext or '.json'}"
+        os.environ["BENCH_PARETO_OUT"] = os.path.join(
+            os.path.dirname(args.out) or ".", "BENCH_pareto.json"
+        )
         modules = QUICK_MODULES
     print("name,us_per_call,derived")
     failures = 0

@@ -1,5 +1,6 @@
 """Reproduce the paper's §V evaluation (reduced): Figs. 5/6-style runs
-of all seven schemes on the paper's heterogeneous 4×10 cluster.
+of the paper's seven schemes — plus the grouped and message-budgeted
+planners (docs/planners.md) — on the heterogeneous 4×10 cluster.
 
 Run:  PYTHONPATH=src python examples/paper_simulation.py [--iters N]
 """
@@ -10,7 +11,7 @@ import numpy as np
 from repro.api import paper_cluster, simulate_training
 
 SCHEMES = ("uncoded", "greedy", "cgc_w", "cgc_e", "standard_gc",
-           "hgc", "hgc_jncss")
+           "hgc", "hgc_jncss", "hgc_grouped", "hgc_comm")
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

@@ -5,8 +5,9 @@ One import surface for everything a user script needs:
   * :class:`CodedCluster` — topology + runtime model + straggler
     detector (``homogeneous`` / ``hetero`` / ``from_observations``),
   * :class:`Plan` + the pluggable :class:`Planner` strategies
-    (``jncss`` | ``fixed`` | ``uniform``) — cluster model → deployed
-    HGC code + λ provider,
+    (``jncss`` | ``fixed`` | ``uniform`` | ``grouped`` |
+    ``comm_budget``) — cluster model → deployed HGC code + λ provider
+    (see ``docs/planners.md`` for the selection guide),
   * :class:`CodedSession` — mesh, sharded state, compiled
     train/eval/generate steps, elastic replan loop, checkpoints
     (``session.fit()``, ``session.step()``, ``session.generate()``),
@@ -31,9 +32,13 @@ from repro.dist.elastic import (
 )
 from repro.sim.simulator import simulate_training
 
+from repro.core.grouping import GroupedHGCCode, GroupTolerance
+
 from repro.api.cluster import CodedCluster, sample_straggler_pattern
 from repro.api.planner import (
+    CommBudgetPlanner,
     FixedPlanner,
+    GroupedPlanner,
     JNCSSPlanner,
     Planner,
     UniformPlanner,
@@ -51,6 +56,8 @@ __all__ = [
     "JNCSSPlanner",
     "FixedPlanner",
     "UniformPlanner",
+    "GroupedPlanner",
+    "CommBudgetPlanner",
     "get_planner",
     "planner_for_scheme",
     "build_coded_batch",
@@ -58,7 +65,9 @@ __all__ = [
     # stable re-exported vocabulary
     "Topology",
     "Tolerance",
+    "GroupTolerance",
     "HGCCode",
+    "GroupedHGCCode",
     "ClusterParams",
     "paper_cluster",
     "StragglerDetector",

@@ -31,13 +31,15 @@ def sample_straggler_pattern(rng, code, params: ClusterParams, D: float):
     """
     wt, eu, _ = params.sample_iteration(rng, D)
     topo = code.topo
-    s_e, s_w = code.tol.s_e, code.tol.s_w
+    s_e = code.tol.s_e
     edge_T = np.empty(topo.n)
     fast_w = []
     off = 0
     for i in range(topo.n):
         mi = topo.m[i]
-        order = np.argsort(wt[off : off + mi])[: mi - s_w]
+        # per-edge tolerance: uniform codes return s_w everywhere,
+        # grouped codes their own s_w^i
+        order = np.argsort(wt[off : off + mi])[: mi - code.tol.s_w_of(i)]
         edge_T[i] = eu[i] + wt[off + order[-1]]
         fast_w.append(tuple(sorted(order.tolist())))
         off += mi
@@ -159,11 +161,16 @@ class CodedCluster:
         (what a replan should price)."""
         return self.detector.updated_params(D_ref)
 
-    def sample_pattern(self, rng, code, D: Optional[float] = None):
-        """One iteration's straggler pattern under the deployed code."""
-        return sample_straggler_pattern(
-            rng, code, self.params, code.load if D is None else D
-        )
+    def sample_pattern(self, rng, code, D=None):
+        """One iteration's straggler pattern under the deployed code.
+
+        ``D`` defaults to the code's per-worker load — the flat array
+        for grouped codes (edges may carry different loads), the scalar
+        otherwise.
+        """
+        if D is None:
+            D = getattr(code, "load_array", code.load)
+        return sample_straggler_pattern(rng, code, self.params, D)
 
     # ------------------------------------------------------------------
     # permanent failures

@@ -57,6 +57,16 @@ def _step_rng(seed: int, step: int) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence([seed, 7919, step]))
 
 
+def _code_desc(code) -> Dict:
+    """The checkpointed code descriptor: enough to rebuild the deployed
+    code deterministically (grouped codes add their per-edge vector)."""
+    d = {"s_e": code.tol.s_e, "s_w": code.tol.s_w, "K": code.K}
+    vec = getattr(code.tol, "s_w_vec", None)
+    if vec is not None:
+        d["s_w_vec"] = [int(s) for s in vec]
+    return d
+
+
 def build_coded_batch(code: HGCCode, streams, fast_e, fast_w, seq_len,
                       with_lam: bool = True):
     """Global batch = all workers' assigned-part examples.
@@ -263,25 +273,39 @@ class CodedSession:
                       f"m={self.cluster.topo.m}")
         ck = extra.get("code")
         if ck and (
-            (ck["s_e"], ck["s_w"], ck["K"]) !=
-            (self.code.tol.s_e, self.code.tol.s_w, self.code.K)
+            ck != _code_desc(self.code)
             or self.code.topo != self.cluster.topo
         ):
             # the run had replanned before the kill — rebuild the
             # deployed code deterministically (same seed ⇒ same code)
-            self.code = HGCCode.build(
-                self.cluster.topo, Tolerance(ck["s_e"], ck["s_w"]),
-                K=ck["K"], seed=self.seed,
-                construction=getattr(self.planner, "construction",
-                                     "random"),
-            )
+            if "s_w_vec" in ck:
+                from repro.core.grouping import (
+                    GroupedHGCCode, GroupTolerance, price_grouped,
+                )
+
+                self.code = GroupedHGCCode.build(
+                    self.cluster.topo,
+                    GroupTolerance(ck["s_e"], tuple(ck["s_w_vec"])),
+                    K=ck["K"], seed=self.seed,
+                )
+                priced = price_grouped(
+                    self.cluster.params, self.code.tol, self.code.loads
+                )
+            else:
+                self.code = HGCCode.build(
+                    self.cluster.topo, Tolerance(ck["s_e"], ck["s_w"]),
+                    K=ck["K"], seed=self.seed,
+                    construction=getattr(self.planner, "construction",
+                                         "random"),
+                )
+                priced = price_tolerance(
+                    self.cluster.params, self.code.tol, self.code.load
+                )
             # keep the plan (the public λ provider) in lockstep with
             # the actually deployed code
             self.plan = Plan(
                 code=self.code, tol=self.code.tol, K=self.code.K,
-                expected_iteration_ms=price_tolerance(
-                    self.cluster.params, self.code.tol, self.code.load
-                ),
+                expected_iteration_ms=priced,
                 jncss=None,
             )
             if self.verbose:
@@ -341,6 +365,7 @@ class CodedSession:
                 f"dist modes need a uniform topology for the "
                 f"(pod, data) mesh, got m={topo.m}"
             )
+        self._require_dist_uniform_load(self.code)
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         from repro.dist import compression as comp_lib
@@ -418,12 +443,27 @@ class CodedSession:
             with_lam=(self._mesh is None),
         )
 
+    def _require_dist_uniform_load(self, code):
+        """Dist modes shard the batch dim evenly over (pod, data) — a
+        grouped code whose edges carry different loads would misalign
+        batch rows with workers.  Uniform-valued grouped plans pass."""
+        if self.mode == "off":
+            return
+        loads = getattr(code, "loads", None)
+        if loads is not None and len(set(loads)) > 1:
+            raise ValueError(
+                f"dist modes need uniform per-worker loads, but the "
+                f"grouped plan carries per-edge loads {tuple(loads)} — "
+                f"use mode='off' (or the simulator) for this planner "
+                f"on this cluster"
+            )
+
     def _iteration(self, step: int, force_drop_edge: int = -1,
                    force_drop_step: int = -1, batch=None) -> Dict:
         code, topo = self.code, self.cluster.topo
         fast_e, fast_w, t_iter, wt = sample_straggler_pattern(
             _step_rng(self.seed, step), code, self.cluster.params,
-            code.load,
+            getattr(code, "load_array", code.load),
         )
         if step == force_drop_step and \
                 0 <= force_drop_edge < topo.n and code.tol.s_e > 0:
@@ -533,14 +573,22 @@ class CodedSession:
                   f"jit cache entries: {cache_entries}")
         return self.report(first_step=start)
 
-    def replan(self):
+    def replan(self, planner: Any = None):
         """Re-run the planner on the detector-updated cluster model;
-        a stable plan reuses the deployed code and part streams."""
+        a stable plan reuses the deployed code and part streams.
+
+        ``planner`` swaps the session's strategy first (string or
+        instance, as in the constructor) — tolerance and λ are runtime
+        operands, so a swap that lands on the same code shapes keeps
+        the compiled step (zero recompiles)."""
+        if planner is not None:
+            self.planner = get_planner(planner)
         plan = self.planner.plan(
             self.cluster.updated_params(self.code.load), self.code.K,
             seed=self.seed, reuse=self.code,
         )
         if plan.code is not self.code:
+            self._require_dist_uniform_load(plan.code)
             if self.verbose:
                 print(f"[train] replan: tolerance → "
                       f"(s_e={plan.tol.s_e}, s_w={plan.tol.s_w}), "
@@ -604,8 +652,7 @@ class CodedSession:
         extra = {
             "streams": [s.state_dict() for s in self.streams],
             "detector": self.cluster.detector.state_dict(),
-            "code": {"s_e": self.code.tol.s_e, "s_w": self.code.tol.s_w,
-                     "K": self.code.K},
+            "code": _code_desc(self.code),
             "cluster": cluster_state,
         }
         if self.tcfg.grad_compression == "int8" and self._mesh is not None:

@@ -188,9 +188,10 @@ class HGCCode:
         self, i: int, fast_workers: Sequence[int]
     ) -> np.ndarray:
         """``c^i_F`` (len m_i, zero on stragglers) — eq. (24)."""
-        if len(set(fast_workers)) < self.topo.m[i] - self.tol.s_w:
+        s_w_i = self.tol.s_w_of(i)
+        if len(set(fast_workers)) < self.topo.m[i] - s_w_i:
             raise ValueError(
-                f"edge {i}: need ≥ {self.topo.m[i] - self.tol.s_w} fast "
+                f"edge {i}: need ≥ {self.topo.m[i] - s_w_i} fast "
                 f"workers, got {len(set(fast_workers))}"
             )
         code = self.Dbar[i]
@@ -290,7 +291,7 @@ class HGCCode:
         for i in fast_edges:
             dead = set(worker_stragglers[i])
             fast = [j for j in range(self.topo.m[i]) if j not in dead]
-            fast = fast[: self.topo.m[i] - self.tol.s_w]
+            fast = fast[: self.topo.m[i] - self.tol.s_w_of(i)]
             msgs = {j: self.worker_encode(i, j, g_parts) for j in fast}
             edge_results[i] = self.edge_decode(i, fast, msgs)
         return self.master_decode(fast_edges, edge_results)

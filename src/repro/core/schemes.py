@@ -41,6 +41,8 @@ SCHEME_NAMES = (
     "standard_gc",
     "hgc",
     "hgc_jncss",
+    "hgc_grouped",
+    "hgc_comm",
 )
 
 
@@ -83,18 +85,25 @@ def _hier_iteration(
     topo: Topology,
     sample: Tuple[np.ndarray, np.ndarray, np.ndarray],
     s_e: int,
-    s_w: int,
+    s_w,
 ) -> IterationOutcome:
-    """eqs (32)/(33): wait fastest m_i−s_w workers, then fastest n−s_e edges."""
+    """eqs (32)/(33): wait fastest m_i−s_w workers, then fastest n−s_e edges.
+
+    ``s_w`` may be a scalar (uniform) or a per-edge vector (grouped
+    tolerance — each edge waits at its own s_w^i).
+    """
     wt, eu, _ = sample
     n = topo.n
+    s_w_arr = np.asarray(s_w)
+    if s_w_arr.ndim == 0:
+        s_w_arr = np.full(n, int(s_w_arr))
     edge_T = np.empty(n)
     fast_w: List[Tuple[int, ...]] = []
     off = 0
     for i in range(n):
         mi = topo.m[i]
         wi = wt[off : off + mi]
-        k = mi - s_w
+        k = mi - int(s_w_arr[i])
         order = np.argsort(wi, kind="stable")[:k]
         edge_T[i] = eu[i] + wi[order[-1]]
         fast_w.append(tuple(sorted(order.tolist())))
@@ -239,6 +248,43 @@ class HGCScheme(Scheme):
         return self.topo.n - self.s_e
 
 
+class GroupedHGCScheme(HGCScheme):
+    """Heterogeneity-aware grouped HGC (per-edge worker tolerances).
+
+    Wraps :class:`repro.core.grouping.GroupedHGCCode`; the waiting rule
+    applies edge ``i``'s own ``s_w^i``, so on intra-edge-heterogeneous
+    clusters the planner can buy tolerance only where it pays.
+    """
+
+    def __init__(
+        self,
+        topo: Topology,
+        K: int,
+        s_e: int,
+        s_w_vec: Sequence[int],
+        seed: int = 0,
+    ):
+        from repro.core.grouping import GroupedHGCCode, GroupTolerance
+
+        self.topo, self.K = topo, K
+        gtol = GroupTolerance(s_e, tuple(int(s) for s in s_w_vec))
+        self.code = GroupedHGCCode.build(topo, gtol, K=K, seed=seed)
+        # self.s_w is the vector: the inherited iteration() passes it to
+        # _hier_iteration, which applies it per edge.
+        self.s_e, self.s_w = s_e, tuple(gtol.s_w_vec)
+        self.name = "hgc_grouped"
+
+    @property
+    def load(self) -> float:
+        """Bottleneck (max over edges) per-worker load."""
+        return float(self.code.load)
+
+    @property
+    def load_array(self) -> np.ndarray:
+        """Flat per-worker loads (edges may differ)."""
+        return self.code.load_array
+
+
 class CGCWScheme(HGCScheme):
     """Conventional single-layer coding workers↔edges (≡ HGC(0, s_w))."""
 
@@ -332,8 +378,16 @@ def make_scheme(
     params: Optional[ClusterParams] = None,
     seed: int = 0,
     construction: str = "random",
+    master_budget: Optional[int] = None,
+    edge_budget: Optional[int] = None,
 ) -> Scheme:
-    """Factory over SCHEME_NAMES.  ``hgc_jncss`` requires ``params``."""
+    """Factory over SCHEME_NAMES.
+
+    ``hgc_jncss``, ``hgc_grouped`` and ``hgc_comm`` require ``params``
+    (they plan from the cluster model).  For ``hgc_comm`` the message
+    budgets default to ``n − s_e`` (master) and ``max_i m_i − s_w``
+    (edge); pass ``master_budget``/``edge_budget`` to set them directly.
+    """
     name = name.lower()
     if name == "uncoded":
         return UncodedScheme(topo, K)
@@ -358,5 +412,37 @@ def make_scheme(
             name="hgc_jncss",
         )
         sch.jncss_result = res  # attach for reporting
+        return sch
+    if name == "hgc_grouped":
+        if params is None:
+            raise ValueError(
+                "hgc_grouped needs ClusterParams for the grouped planner"
+            )
+        from repro.core import grouping
+
+        res = grouping.plan_grouped(params, K, only_compatible=True)
+        sch = GroupedHGCScheme(topo, K, res.s_e, res.s_w_vec, seed=seed)
+        sch.grouped_result = res  # attach for reporting
+        return sch
+    if name == "hgc_comm":
+        if params is None:
+            raise ValueError(
+                "hgc_comm needs ClusterParams for the budget solver"
+            )
+        from repro.core import comm_tradeoff
+
+        if master_budget is None:
+            master_budget = topo.n - s_e
+        if edge_budget is None:
+            edge_budget = max(topo.m) - s_w
+        point = comm_tradeoff.solve_comm_budget(
+            params, K, max_master_msgs=master_budget,
+            max_edge_msgs=edge_budget, integral_K=K,
+        )
+        sch = HGCScheme(
+            topo, K, point.s_e, point.s_w, seed=seed,
+            construction=construction, name="hgc_comm",
+        )
+        sch.comm_point = point  # attach for reporting
         return sch
     raise ValueError(f"unknown scheme {name!r}; choose from {SCHEME_NAMES}")

@@ -89,6 +89,13 @@ class Tolerance:
     def num_fast_workers(self, topo: Topology, i: int) -> int:
         return topo.m[i] - self.s_w
 
+    def s_w_of(self, i: int) -> int:
+        """Worker tolerance at edge ``i`` — uniform here; the grouped
+        tolerance (:class:`repro.core.grouping.GroupTolerance`) overrides
+        this per edge.  Decode paths call this instead of ``.s_w`` so
+        both tolerance kinds ride the same code."""
+        return self.s_w
+
 
 def straggler_pattern_valid(
     topo: Topology,

@@ -75,7 +75,12 @@ def main(argv=None):
     ap.add_argument("--part-batch", type=int, default=1,
                     help="examples per dataset part per iteration")
     ap.add_argument("--scheme", default="hgc_jncss",
-                    choices=["hgc", "hgc_jncss", "uncoded"])
+                    choices=["hgc", "hgc_jncss", "uncoded",
+                             "hgc_grouped", "hgc_comm"],
+                    help="planning strategy (see docs/planners.md): "
+                         "hgc_jncss=Algorithm 2, hgc=fixed (s_e,s_w), "
+                         "uncoded=no redundancy, hgc_grouped=per-edge "
+                         "worker tolerances, hgc_comm=message-budgeted")
     ap.add_argument("--s-e", type=int, default=1)
     ap.add_argument("--s-w", type=int, default=1)
     ap.add_argument("--n-edges", type=int, default=2)

@@ -50,9 +50,12 @@ def simulate_times(
     seed: int = 0,
 ) -> np.ndarray:
     rng = np.random.default_rng(seed)
+    # grouped schemes carry per-worker loads — compute times then differ
+    # per edge; uniform schemes fall back to the scalar D
+    D = getattr(scheme, "load_array", scheme.load)
     out = np.empty(iters)
     for t in range(iters):
-        sample = params.sample_iteration(rng, scheme.load)
+        sample = params.sample_iteration(rng, D)
         out[t] = scheme.iteration(sample).time
     return out
 
@@ -136,8 +139,9 @@ def simulate_training(
     acc_times: List[float] = []
     acc_iters: List[int] = []
     cum_ms = 0.0
+    D = getattr(scheme, "load_array", scheme.load)
     for t in range(iters):
-        sample = params.sample_iteration(rng, scheme.load)
+        sample = params.sample_iteration(rng, D)
         outcome = scheme.iteration(sample)
         times[t] = outcome.time
         cum_ms += outcome.time

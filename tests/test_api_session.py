@@ -15,7 +15,9 @@ import pytest
 
 from repro.api import (
     CodedCluster,
+    CommBudgetPlanner,
     FixedPlanner,
+    GroupedPlanner,
     JNCSSPlanner,
     Planner,
     Tolerance,
@@ -38,7 +40,8 @@ def _smoke_cfg(arch="llama3-8b"):
 def test_planner_strategies():
     cluster = CodedCluster.hetero(2, 4)
     for spec, expect_jncss in (("jncss", True), ("fixed", False),
-                               ("uniform", False)):
+                               ("uniform", False), ("grouped", False),
+                               ("comm_budget", False)):
         planner = get_planner(spec, 1, 1)
         assert isinstance(planner, Planner)
         K = planner.initial_K(cluster.topo)
@@ -53,11 +56,25 @@ def test_planner_strategies():
         if again.tol == plan.tol and again.K == plan.K:
             assert again.code is plan.code
     assert get_planner("uniform").tol == Tolerance(0, 0)
-    assert isinstance(planner_for_scheme("hgc_jncss"), JNCSSPlanner)
-    assert isinstance(planner_for_scheme("hgc", 1, 1), FixedPlanner)
-    assert planner_for_scheme("uncoded").tol == Tolerance(0, 0)
     with pytest.raises(ValueError, match="unknown planner"):
         get_planner("bogus")
+
+
+def test_planner_for_scheme_round_trip():
+    """Every CLI --scheme name maps to the planner strategy that
+    reproduces it through the CodedSession seam."""
+    expected = {
+        "hgc_jncss": JNCSSPlanner,
+        "hgc": FixedPlanner,
+        "uncoded": UniformPlanner,
+        "hgc_grouped": GroupedPlanner,
+        "hgc_comm": CommBudgetPlanner,
+    }
+    for scheme, cls in expected.items():
+        assert isinstance(planner_for_scheme(scheme, 1, 1), cls), scheme
+    assert planner_for_scheme("uncoded").tol == Tolerance(0, 0)
+    with pytest.raises(ValueError, match="unknown planner"):
+        planner_for_scheme("bogus")
 
 
 def test_plan_lam_array_matches_grad_sync():
@@ -172,6 +189,111 @@ def test_session_shrink_replan_kill_resume_bit_for_bit(tmp_path):
     # bit-for-bit, not allclose
     assert a.losses[:6] == b1.losses
     assert a.losses[6:] == b2.losses
+
+
+def test_session_replan_planner_swap_zero_recompile(tmp_path):
+    """Swapping the planning STRATEGY mid-run through replan() rides the
+    λ seam: grouped → jncss changes the deployed code object but not the
+    per-worker load, so the jit signature is untouched (one cache entry).
+    A swap that DOES change the load (comm_budget here picks a larger
+    tolerance) is a real batch-shape change and costs exactly one more
+    compile — never a silent per-step recompile."""
+    from repro.api import CodedSession
+
+    s = CodedSession(
+        CodedCluster.hetero(2, 4),
+        _smoke_cfg(),
+        planner="grouped",
+        mode="off",
+        seq_len=16,
+        optimizer="sgd",
+        lr=0.05,
+        total_steps=8,
+        seed=0,
+        log_every=100,
+        verbose=False,
+    )
+    assert isinstance(s.planner, GroupedPlanner)
+    s.fit(2)
+    load_before = s.code.load
+    s.replan(planner="jncss")
+    assert isinstance(s.planner, JNCSSPlanner)
+    assert s.code.load == load_before
+    s.fit(5)
+    entries = s.jit_cache_entries()
+    assert entries in (-1, 1), entries  # -1: counter API unavailable
+    s.replan(planner="comm_budget")
+    assert isinstance(s.planner, CommBudgetPlanner)
+    s.fit(8)
+    assert len(s.losses) == 8 and np.all(np.isfinite(s.losses))
+    entries = s.jit_cache_entries()
+    expected = 1 if s.code.load == load_before else 2
+    assert entries in (-1, expected), (entries, s.code.load)
+
+
+def _make_grouped_session(ck_dir, resume=False, steps=8):
+    from repro.api import CodedSession
+
+    return CodedSession(
+        CodedCluster.hetero(2, 4),
+        _smoke_cfg(),
+        planner="grouped",
+        mode="off",
+        seq_len=16,
+        optimizer="sgd",
+        lr=0.05,
+        total_steps=steps,
+        seed=0,
+        checkpoint_dir=str(ck_dir),
+        checkpoint_every=2,
+        resume=resume,
+        log_every=100,
+        verbose=False,
+    )
+
+
+def test_session_grouped_kill_resume_bit_for_bit(tmp_path):
+    """The checkpoint descriptor of a grouped code carries s_w_vec and
+    a resumed session rebuilds a GroupedHGCCode (same trajectory)."""
+    from repro.api import GroupedHGCCode
+    from repro.api.session import _code_desc
+
+    a = _make_grouped_session(tmp_path / "a")
+    a.fit(8)
+
+    b1 = _make_grouped_session(tmp_path / "b")
+    b1.fit(4)
+    desc = _code_desc(b1.code)
+    assert "s_w_vec" in desc and desc["K"] == b1.code.K
+    meta = json.load(open(os.path.join(
+        str(tmp_path / "b"), "step_0000000004", "meta.json")))
+    assert meta["extra"]["code"] == json.loads(json.dumps(desc))
+
+    b2 = _make_grouped_session(tmp_path / "b", resume=True)
+    assert isinstance(b2.code, GroupedHGCCode)
+    assert _code_desc(b2.code) == desc
+    b2.fit(8)
+    assert a.losses[:4] == b1.losses
+    assert a.losses[4:] == b2.losses
+
+
+def test_session_dist_rejects_nonuniform_grouped_load():
+    """--dist modes key batch rows to workers, so a grouped code with
+    per-edge loads must be uniform-valued; the session says so up front
+    instead of crashing on a shape mismatch inside shard_map."""
+    from repro.api import CodedSession, GroupTolerance
+    from repro.core.grouping import GroupedHGCCode, compatible_K_grouped
+
+    topo = Topology.uniform(2, 4)
+    gtol = GroupTolerance(1, (0, 2))
+    code = GroupedHGCCode.build(
+        topo, gtol, K=compatible_K_grouped(topo, gtol, at_least=8))
+    s = CodedSession(None, _smoke_cfg())  # serve-only: just the guard
+    s.mode = "coded"
+    with pytest.raises(ValueError, match="uniform"):
+        s._require_dist_uniform_load(code)
+    s.mode = "off"
+    s._require_dist_uniform_load(code)  # reference loop: fine
 
 
 def test_session_step_and_eval(tmp_path):

@@ -1,0 +1,153 @@
+"""Property tests over the scheme registry (ISSUE satellite).
+
+The contract every exact scheme advertises: under ANY straggler pattern
+within its tolerance, the master's aggregate equals the exact gradient
+sum Σ_k g_k.  Rather than hand-constructing outcomes, each example
+draws random (possibly adversarially boosted) runtimes, lets the
+scheme's own waiting rule pick the fast sets, and checks the decode —
+so the property covers the waiting rule AND the decode together.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback
+    from repro._hypothesis_fallback import (  # noqa: F401
+        given, settings, strategies as st,
+    )
+
+from repro.api.cluster import CodedCluster
+from repro.core.grouping import (
+    GroupedHGCCode,
+    GroupTolerance,
+    compatible_K_grouped,
+    plan_grouped,
+)
+from repro.core import jncss
+from repro.core.schemes import SCHEME_NAMES, make_scheme
+from repro.core.topology import Topology
+
+# 2×3 workers with K = W = 6: every (s_e, s_w) pair is construction-
+# compatible, so the registry sweep hits all schemes at one K.
+TOPO = Topology.uniform(2, 3)
+K = 6
+PARAMS = CodedCluster.hetero(2, 3).params
+DIM = 5
+
+
+@pytest.fixture(scope="module")
+def schemes():
+    return [
+        make_scheme(n, TOPO, K, s_e=1, s_w=1, params=PARAMS, seed=0)
+        for n in SCHEME_NAMES
+    ]
+
+
+def _boosted_sample(seed: int, slow_edges, slow_workers):
+    """Random runtimes with targeted stragglers boosted 100×: the
+    waiting rule then drops exactly the boosted nodes (when tolerated),
+    exercising patterns uniform sampling would rarely produce."""
+    rng = np.random.default_rng(seed)
+    wt, eu, wd = PARAMS.sample_iteration(rng, 2.0)
+    wt = wt.copy()
+    eu = eu.copy()
+    wd = wd.copy()
+    for w in slow_workers:
+        wt[w % TOPO.total_workers] *= 100.0
+        wd[w % TOPO.total_workers] *= 100.0
+    for e in slow_edges:
+        eu[e % TOPO.n] *= 100.0
+    return wt, eu, wd
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    slow_edges=st.lists(st.integers(0, 1), max_size=1),
+    slow_workers=st.lists(st.integers(0, 5), max_size=2, unique=True),
+)
+def test_every_exact_scheme_decodes_exact_sum(
+    schemes, seed, slow_edges, slow_workers
+):
+    sample = _boosted_sample(seed, slow_edges, slow_workers)
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(K, DIM))
+    true = g.sum(axis=0)
+    for sch in schemes:
+        out = sch.iteration(sample)
+        got = sch.gradient(g, out)
+        if sch.exact:
+            np.testing.assert_allclose(
+                got, true, rtol=1e-7, atol=1e-7,
+                err_msg=f"{sch.name} at seed={seed}",
+            )
+        else:  # greedy: partial by design, still well-shaped
+            assert got.shape == true.shape and np.all(np.isfinite(got))
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_grouped_code_decodes_any_tolerated_pattern(data):
+    """Grouped codes: exact decode for EVERY straggler pattern within
+    (s_e, s_w^i) — drawn directly, not via runtimes, to cover corner
+    patterns (all drops at one edge, the max-tolerance edge, etc.)."""
+    topo = Topology.uniform(2, 4)
+    gtol = GroupTolerance(1, (0, 2))
+    code = GroupedHGCCode.build(
+        topo, gtol, K=compatible_K_grouped(topo, gtol, at_least=8)
+    )
+    seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(code.K, DIM))
+    n_dead_edges = data.draw(st.integers(0, gtol.s_e), label="edges")
+    dead_edges = list(rng.choice(
+        topo.n, size=n_dead_edges, replace=False
+    ))
+    worker_stragglers = []
+    for i in range(topo.n):
+        s_i = data.draw(
+            st.integers(0, gtol.s_w_of(i)), label=f"s_w_{i}"
+        )
+        worker_stragglers.append(tuple(rng.choice(
+            topo.m[i], size=s_i, replace=False
+        )))
+    out = code.simulate_iteration(g, dead_edges, worker_stragglers)
+    np.testing.assert_allclose(
+        out, g.sum(axis=0), rtol=1e-7, atol=1e-7,
+        err_msg=f"edges={dead_edges} workers={worker_stragglers}",
+    )
+
+
+def test_grouped_plan_never_slower_than_jncss():
+    """The grouped search space contains every uniform vector, so its
+    model-expected time is a lower envelope of JNCSS's."""
+    for params, K_ in ((PARAMS, 6), (CodedCluster.hetero(2, 4).params, 8)):
+        rj = jncss.solve(params, K_)
+        rg = plan_grouped(params, K_)
+        assert rg.T_tol <= rj.T_tol + 1e-9
+
+
+def test_grouped_loads_follow_per_edge_tolerance():
+    topo = Topology.uniform(2, 4)
+    gtol = GroupTolerance(1, (0, 2))
+    code = GroupedHGCCode.build(
+        topo, gtol, K=compatible_K_grouped(topo, gtol, at_least=8)
+    )
+    W = topo.total_workers
+    for i, D_i in enumerate(code.loads):
+        assert D_i == code.K * (gtol.s_e + 1) * (gtol.s_w_of(i) + 1) // W
+    assert code.load == max(code.loads)
+    assert list(code.load_array) == [2.0] * 4 + [6.0] * 4
+
+
+def test_grouped_tolerance_validation():
+    topo = Topology.uniform(2, 4)
+    with pytest.raises(ValueError, match="entries"):
+        GroupTolerance(1, (0,)).validate(topo)
+    with pytest.raises(ValueError, match="outside"):
+        GroupTolerance(1, (0, 4)).validate(topo)
+    with pytest.raises(ValueError, match="outside"):
+        GroupTolerance(2, (0, 0)).validate(topo)
+    # uniform guarantee is the per-edge minimum
+    assert GroupTolerance(1, (0, 2)).s_w == 0
