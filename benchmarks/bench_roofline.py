@@ -1,27 +1,161 @@
-"""Roofline table from the dry-run artifacts (deliverable g).
+"""Roofline probe + table (deliverable g), wired into the baseline gate.
 
-Reads results/dryrun/*.json (produced by repro.launch.dryrun) and
-emits one row per (arch × shape × mesh): the three roofline terms, the
-dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.  us_per_call reports
-the projected step time = max(term)·1e6.
+Two modes, both emitted on every run:
+
+1. **Self-generated smoke probe** (always): a child process compiles
+   the deepened llama3-family smoke train step on the 8-device
+   (pod=2, data=2, model=2) test mesh and runs the HLO cost model
+   (:mod:`repro.launch.hlo_analysis`) over the compiled module — no
+   wall-clock timing anywhere.  The record carries the three roofline
+   terms (TPU v5e constants from :mod:`repro.api.aot`), the dominant
+   bottleneck, and the **arithmetic intensity** (flops per
+   bf16-equivalent HBM byte), asserted against a floor: a change that
+   bloats the step's memory traffic relative to its flops (a dropped
+   fusion, an accidental f32 spill, remat gone wrong) fails the probe
+   in CI rather than shipping green.  ``us_per_call`` is the projected
+   step time ``max(term)·1e6`` — deterministic, so
+   ``benchmarks.check_regression`` gates it against
+   ``benchmarks/baselines/BENCH_roofline.json`` (a >tol increase means
+   the compiled step's flops or bytes grew, not that a runner was
+   slow).  When ``BENCH_ROOFLINE_OUT`` is set (``benchmarks.run
+   --quick``) the record is written there as JSON.
+
+2. **Legacy artifact table** (when present): one row per
+   results/dryrun/*.json produced by ``repro.launch.dryrun --all``.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import subprocess
+import sys
 
 from benchmarks.common import row
 
 RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
 
+_CHILD_FLAG = "--child"
+
+# flops per bf16-equivalent HBM byte of the smoke train step.  Measured
+# ~5.3 on the probe config (remat'd flash step at S=512); the floor at
+# half catches a step whose HBM traffic doubles relative to its flops.
+INTENSITY_FLOOR = 2.5
+
+
+def _child() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import FAST
+    from repro.api.aot import HBM_BW, LINK_BW, PEAK_FLOPS
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.mesh import make_test_mesh
+    from repro.launch import hlo_analysis
+    from repro.launch import steps as steps_lib
+    from repro.optim import make_optimizer
+
+    B, S = (8, 512) if FAST else (8, 1024)
+    cfg = dataclasses.replace(
+        get_smoke_config("llama3-8b"),
+        n_layers=16, d_model=128, d_ff=256, head_dim=32,
+        flash=True, remat_policy="save_block_outputs",
+    )
+    tcfg = TrainConfig(optimizer="sgd", lr=1e-2, total_steps=100,
+                       warmup_steps=10, grad_clip=0.0)
+    optimizer = make_optimizer("sgd")
+    mesh = make_test_mesh(2, 2, 2)
+    params_abs, opt_abs = steps_lib.abstract_state(cfg, tcfg)
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "weights": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        "denom": jax.ShapeDtypeStruct((), jnp.float32),
+    }
+    lam_abs = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    step_fn = jax.jit(steps_lib._make_dist_train_step(
+        cfg, tcfg, mesh, optimizer=optimizer))
+    compiled = step_fn.lower(
+        params_abs, opt_abs, batch_abs, lam_abs, {},
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ).compile()
+    ana = hlo_analysis.analysis_record(compiled.as_text(),
+                                       pod_stride=10**9)
+    compute_s = ana["flops"] / PEAK_FLOPS
+    memory_s = ana["bytes_accessed_bf16eq"] / HBM_BW
+    collective_s = ana["collective_link_bytes_bf16eq"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    intensity = ana["flops"] / max(ana["bytes_accessed_bf16eq"], 1.0)
+    print(json.dumps({
+        "name": "roofline_smoke",
+        "us_per_call": max(terms.values()) * 1e6,
+        "flops": ana["flops"],
+        "bytes_accessed_bf16eq": ana["bytes_accessed_bf16eq"],
+        "collective_link_bytes_bf16eq":
+            ana["collective_link_bytes_bf16eq"],
+        "arithmetic_intensity": intensity,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "batch": B,
+        "seq_len": S,
+        "mesh": "pod=2,data=2,model=2",
+    }))
+
+
+def _smoke_probe() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_roofline", _CHILD_FLAG],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"roofline smoke probe failed:\n{r.stderr[-2000:]}"
+        )
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    # the intensity floor: check_regression only gates the timed key,
+    # so the flops-per-HBM-byte property is asserted here
+    if rec["arithmetic_intensity"] < INTENSITY_FLOOR:
+        raise RuntimeError(
+            f"arithmetic intensity regressed: "
+            f"{rec['arithmetic_intensity']:.2f} flops/byte < floor "
+            f"{INTENSITY_FLOOR} (flops {rec['flops']:.3e}, bf16-eq "
+            f"bytes {rec['bytes_accessed_bf16eq']:.3e}) — the step's "
+            f"HBM traffic grew relative to its compute"
+        )
+    row(
+        "roofline/smoke",
+        rec["us_per_call"],
+        f"dominant={rec['dominant'].replace('_s', '')};"
+        f"intensity={rec['arithmetic_intensity']:.2f}flops/B;"
+        f"compute={rec['compute_s'] * 1e3:.2f}ms;"
+        f"memory={rec['memory_s'] * 1e3:.2f}ms;"
+        f"collective={rec['collective_s'] * 1e3:.2f}ms",
+    )
+    out = os.environ.get("BENCH_ROOFLINE_OUT", "")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+
 
 def main() -> None:
+    _smoke_probe()
     files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
     if not files:
-        row("roofline/missing", 0.0,
+        row("roofline/artifacts", 0.0,
             f"no dry-run artifacts under {RESULTS}; run "
-            "`python -m repro.launch.dryrun --all --out results/dryrun`")
+            "`python -m repro.launch.dryrun --all --out results/dryrun` "
+            "for the full arch x shape x mesh table")
         return
     n_ok = n_skip = n_err = 0
     for f in files:
@@ -54,4 +188,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if _CHILD_FLAG in sys.argv:
+        _child()
+    else:
+        main()

@@ -1,0 +1,155 @@
+"""Pipeline-parallel train-step probe — per-device state + step time.
+
+Measures ``steps._make_dist_train_step`` with the stage axis on
+(stage=2, pod=2, data=2 — 8 devices) against the stage-less coded
+baseline (pod=2, data=2), using a deepened llama3-family smoke config
+(flash attention + ``save_block_outputs`` remat) whose stacked layer
+groups — the arrays PP shards by pp× on the leading dim — dominate the
+parameter tree.  Records both step times, the static schedule's bubble
+fraction, and both compiled per-device state footprints
+(``memory_analysis().argument_size_in_bytes`` — params + opt state +
+batch as laid out on one device):
+
+  * ``state_ratio = arg_bytes_base / arg_bytes_pp`` must stay ≥ ~1.4 at
+    pp=2 (the point of pipeline parallelism: each stage holds only its
+    own layer block),
+  * ``bubble_frac = (pp-1)/(M+pp-1)`` is recorded so schedule changes
+    show up in the artifact,
+  * ``us_per_step`` (the PP step) is the timed key CI's
+    ``check_regression`` gates against
+    ``benchmarks/baselines/BENCH_trainstep_pp.json``.
+
+Like the TP/SP probes, the measurement runs in a child process so the
+forced host-device count precedes jax initialization; the parent emits
+the CSV row and, when ``BENCH_TRAINSTEP_PP_OUT`` is set
+(``benchmarks.run --quick``), the JSON record.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD_FLAG = "--child"
+
+PP, MICRO = 2, 2
+
+
+def _child() -> None:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import FAST, timeit
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.mesh import make_test_mesh
+    from repro.launch import steps as steps_lib
+    from repro.models import transformer as tf
+    from repro.optim import make_optimizer
+
+    B, S = (8, 512) if FAST else (8, 1024)
+    cfg = dataclasses.replace(
+        get_smoke_config("llama3-8b"),
+        n_layers=16, d_model=128, d_ff=256, head_dim=32,
+        flash=True, remat_policy="save_block_outputs",
+    )
+    optimizer = make_optimizer("sgd")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = optimizer.init(params)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "targets": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "weights": jnp.ones((B, S), jnp.float32),
+        "denom": jnp.float32(B * S),
+    }
+    lam = jnp.full((2, 2), 0.25, jnp.float32)
+
+    def measure(pp: int):
+        tcfg = TrainConfig(
+            optimizer="sgd", lr=1e-2, total_steps=100, warmup_steps=10,
+            grad_clip=0.0,
+            pp_stages=pp, microbatches=MICRO if pp > 1 else 0,
+        )
+        mesh = make_test_mesh(2, 2, 1, stages=pp)
+        step_fn = jax.jit(steps_lib._make_dist_train_step(
+            cfg, tcfg, mesh, optimizer=optimizer))
+        compiled = step_fn.lower(
+            params, opt_state, batch, lam, {}, jnp.asarray(0)
+        ).compile()
+        ma = compiled.memory_analysis()
+        args = int(ma.argument_size_in_bytes) if ma is not None else 0
+
+        def run():
+            _, _, _, metrics = step_fn(
+                params, opt_state, batch, lam, {}, jnp.asarray(0)
+            )
+            jax.block_until_ready(metrics["loss"])
+
+        us = min(timeit(run, repeats=3 if FAST else 5) for _ in range(2))
+        return us, args
+
+    base_us, base_bytes = measure(pp=1)
+    pp_us, pp_bytes = measure(pp=PP)
+    print(json.dumps({
+        "name": "trainstep_pp_smoke",
+        "us_per_step": pp_us,
+        "base_us_per_step": base_us,
+        "state_bytes_pp": pp_bytes,
+        "state_bytes_base": base_bytes,
+        "state_ratio": (base_bytes / pp_bytes) if pp_bytes else 0.0,
+        "pp": PP,
+        "microbatches": MICRO,
+        "bubble_frac": (PP - 1) / (MICRO + PP - 1),
+        "batch": B,
+        "seq_len": S,
+        "mesh": f"stage={PP},pod=2,data=2",
+    }))
+
+
+def main() -> None:
+    if _CHILD_FLAG in sys.argv:
+        _child()
+        return
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src") or "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_trainstep_pp", _CHILD_FLAG],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"PP train-step probe failed:\n{r.stderr[-2000:]}"
+        )
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    # the point of PP: check_regression only gates the timed keys, so
+    # the per-device state win (a deterministic compile-time metric —
+    # each stage holds 1/pp of the stacked layer groups) is asserted
+    # here; a silently stage-replicated param tree must fail the probe
+    if rec["state_bytes_pp"] and rec["state_ratio"] < 1.4:
+        raise RuntimeError(
+            f"PP per-device state win regressed: state_ratio="
+            f"{rec['state_ratio']:.2f}x (base {rec['state_bytes_base']} B "
+            f"vs PP {rec['state_bytes_pp']} B), expected >= 1.4x"
+        )
+    print(f"{rec['name']},{rec['us_per_step']:.1f},"
+          f"base={rec['base_us_per_step']:.1f}us "
+          f"state_ratio={rec['state_ratio']:.2f}x "
+          f"bubble={rec['bubble_frac']:.2f} "
+          f"B{rec['batch']}xS{rec['seq_len']}@{rec['mesh']}")
+    out = os.environ.get("BENCH_TRAINSTEP_PP_OUT", "")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

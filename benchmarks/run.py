@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.bench_trainstep",         # CI regression probe
     "benchmarks.bench_trainstep_tp",      # CI regression probe (dist TP)
     "benchmarks.bench_trainstep_sp",      # CI regression probe (seq-par)
+    "benchmarks.bench_trainstep_pp",      # CI regression probe (pipeline)
 ]
 
 QUICK_MODULES = [
@@ -39,6 +40,8 @@ QUICK_MODULES = [
     "benchmarks.bench_trainstep",
     "benchmarks.bench_trainstep_tp",
     "benchmarks.bench_trainstep_sp",
+    "benchmarks.bench_trainstep_pp",
+    "benchmarks.bench_roofline",
 ]
 
 
@@ -57,8 +60,12 @@ def main(argv=None) -> None:
         root, ext = os.path.splitext(args.out)
         os.environ["BENCH_TRAINSTEP_TP_OUT"] = f"{root}_tp{ext or '.json'}"
         os.environ["BENCH_TRAINSTEP_SP_OUT"] = f"{root}_sp{ext or '.json'}"
+        os.environ["BENCH_TRAINSTEP_PP_OUT"] = f"{root}_pp{ext or '.json'}"
         os.environ["BENCH_PARETO_OUT"] = os.path.join(
             os.path.dirname(args.out) or ".", "BENCH_pareto.json"
+        )
+        os.environ["BENCH_ROOFLINE_OUT"] = os.path.join(
+            os.path.dirname(args.out) or ".", "BENCH_roofline.json"
         )
         modules = QUICK_MODULES
     print("name,us_per_call,derived")

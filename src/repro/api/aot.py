@@ -49,6 +49,7 @@ def run_cell(
     remat_policy: str = "full",
     mode: str = "2d",
     moe_ep_axis: str = "model",
+    seq_shard: bool = False,
     verbose: bool = True,
 ) -> Dict:
     """Lower + compile one (arch × shape × mesh) cell; returns the record."""
@@ -89,11 +90,26 @@ def run_cell(
         "flash": flash, "sharded_accum": sharded_accum,
         "kv_repeat": kv_repeat, "remat_policy": remat_policy,
         "mode": mode, "moe_ep_axis": moe_ep_axis,
+        "seq_shard": seq_shard,
     }
+    if seq_shard:
+        # the pjit counterpart of the dist path's --seq-shard: the
+        # activation anchors pin the SEQ dim (not the feature dim) to
+        # "model" between the TP collective pairs, so GSPMD lowers the
+        # row-parallel all-reduces as reduce-scatter + all-gather and
+        # the inter-block activations hold 1/tp of the sequence
+        if mode == "dp_only":
+            raise ValueError(
+                "seq_shard needs tensor parallelism (mode='dp_only' "
+                "has no model-sharded activations to seq-shard)"
+            )
+        sh.validate_seq_shard(cfg, int(mesh.shape.get("model", 1)),
+                              shape.seq_len)
     try:
         dp_override = tuple(mesh.axis_names) if mode == "dp_only" else None
         with mesh, sh.activation_sharding(
-                mesh, dp=dp_override, tp=(mode != "dp_only")):
+                mesh, dp=dp_override, tp=(mode != "dp_only"),
+                seq=seq_shard):
             if shape.kind in ("train", "prefill"):
                 params_abs, opt_abs = steps_lib.abstract_state(cfg, tcfg)
                 pspecs = sh.fit_pspecs(

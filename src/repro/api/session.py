@@ -134,6 +134,8 @@ class CodedSession:
         mode: str = "off",
         tp: int = 1,
         seq_shard: Optional[bool] = None,
+        pp: int = 1,
+        microbatches: int = 0,
         seq_len: int = 64,
         part_batch: int = 1,
         K: int = 0,
@@ -168,6 +170,14 @@ class CodedSession:
             else TrainConfig.__dataclass_fields__[
                 "seq_shard_activations"].default
         )
+        self.pp = max(int(pp), 1)
+        self.microbatches = max(int(microbatches), 0)
+        if self.microbatches and self.pp <= 1:
+            raise ValueError(
+                "microbatches requires pp > 1 (the pipeline microbatch "
+                "count only applies to the stage pipeline; the "
+                "single-host accumulation knob is TrainConfig.microbatch)"
+            )
         self.seq_len = seq_len
         self.part_batch = part_batch
         self.seed = seed
@@ -225,6 +235,8 @@ class CodedSession:
             grad_compression="int8" if mode == "coded_int8" else "none",
             grad_compression_block=grad_block,
             seq_shard_activations=self.seq_shard,
+            pp_stages=self.pp,
+            microbatches=self.microbatches,
         )
 
         # ---- data: one resumable stream per dataset part -------------
@@ -354,6 +366,11 @@ class CodedSession:
                     "--seq-shard requires a dist mode (sequence "
                     "sharding rides the 'model' mesh axis)"
                 )
+            if self.pp > 1:
+                raise ValueError(
+                    "pp > 1 requires a dist mode (the pipeline runs "
+                    "over the 'stage' mesh axis inside shard_map)"
+                )
             self.train_step = jax.jit(
                 steps_lib.make_train_step(self.cfg, self.tcfg,
                                           optimizer=self._optimizer)
@@ -380,15 +397,21 @@ class CodedSession:
             # validate_tp-style clear errors: tp>1 requirement +
             # seq % tp divisibility (+ the recurrent fallback warning)
             shard_lib.validate_seq_shard(self.cfg, self.tp, self.seq_len)
-        mesh = self._mesh = make_test_mesh(pods, data, self.tp)
+        self._validate_pp(self.code)
+        mesh = self._mesh = make_test_mesh(pods, data, self.tp,
+                                           stages=self.pp)
         if self.verbose:
             print(f"[train] dist={self.mode}: mesh "
-                  f"(pod={pods} × data={data} × "
+                  + (f"(stage={self.pp} × " if self.pp > 1 else "(")
+                  + f"pod={pods} × data={data} × "
                   f"model={self.tp}), "
                   f"grad_compression={self.tcfg.grad_compression}"
                   + (f", TP degree {self.tp}" if self.tp > 1 else "")
                   + (", seq-parallel activations"
-                     if self.seq_shard and self.tp > 1 else ""))
+                     if self.seq_shard and self.tp > 1 else "")
+                  + (f", pipeline stages {self.pp} × "
+                     f"{self.microbatches or self.pp} microbatches"
+                     if self.pp > 1 else ""))
 
         param_sh, opt_sh = shard_lib.state_shardings(
             self.params, self.opt_state, self.cfg, mesh,
@@ -441,6 +464,22 @@ class CodedSession:
         return build_coded_batch(
             self.code, self.streams, fast_e, fast_w, self.seq_len,
             with_lam=(self._mesh is None),
+        )
+
+    def _validate_pp(self, code):
+        """Clear pp errors up front: group count % stages AND the
+        per-group coded batch rows % microbatches.  Re-checked on every
+        replan/shrink — a new code's load D changes the row count."""
+        if self.pp <= 1:
+            return
+        from repro.dist import sharding as shard_lib
+
+        loads = getattr(code, "loads", None)
+        load = int(loads[0]) if loads else int(code.load)
+        shard_lib.validate_pp(
+            self.cfg, self.pp,
+            microbatches=self.microbatches or self.pp,
+            batch_rows=load * self.part_batch,
         )
 
     def _require_dist_uniform_load(self, code):
@@ -589,6 +628,7 @@ class CodedSession:
         )
         if plan.code is not self.code:
             self._require_dist_uniform_load(plan.code)
+            self._validate_pp(plan.code)
             if self.verbose:
                 print(f"[train] replan: tolerance → "
                       f"(s_e={plan.tol.s_e}, s_w={plan.tol.s_w}), "

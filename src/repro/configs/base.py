@@ -216,3 +216,16 @@ class TrainConfig:
     # flag (CodedSession ``seq_shard=``) overrides it.  Needs tp > 1
     # and seq_len % tp == 0 (sharding.validate_seq_shard).
     seq_shard_activations: bool = False
+    # pipeline parallelism over the leading "stage" mesh axis: the
+    # stacked layer groups shard stage-wise (each stage owns a
+    # contiguous block of n_groups // pp_stages groups) and the dist
+    # train step runs a microbatched pipeline schedule with ppermute
+    # activation handoffs.  Needs n_groups % pp_stages == 0
+    # (sharding.validate_pp).  1 ⇒ off (no "stage" mesh axis at all).
+    pp_stages: int = 1
+    # pipeline microbatch COUNT per step (distinct from ``microbatch``,
+    # the accumulation SIZE of the single-host path): the per-group
+    # coded batch splits into this many microbatches flowing through
+    # the stage pipeline.  0 ⇒ pp_stages (minimum that fills the
+    # pipeline); must divide the per-group batch rows.
+    microbatches: int = 0

@@ -36,6 +36,7 @@ PyTree = Any
 POD_AXIS = "pod"
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
+STAGE_AXIS = "stage"
 
 _IS_SPEC = lambda x: isinstance(x, P)  # noqa: E731
 
@@ -82,6 +83,12 @@ class ShardCtx:
     tp: int = 1
     inside_shard_map: bool = False
     seq_shard: bool = False
+    # pipeline parallelism over the leading "stage" mesh axis: each
+    # stage holds its contiguous block of n_groups // pp layer groups
+    # (param leaves under "groups" shard their stacked leading dim) and
+    # the dist train step drives a microbatched ppermute pipeline.
+    stage_axis: str = STAGE_AXIS
+    pp: int = 1
 
     @property
     def active(self) -> bool:
@@ -91,6 +98,17 @@ class ShardCtx:
     def sp(self) -> bool:
         """Sequence-parallel regime on (TP active + seq sharding)."""
         return self.active and self.seq_shard
+
+    @property
+    def pp_active(self) -> bool:
+        """Pipeline-parallel regime on (inside shard_map + stages)."""
+        return self.inside_shard_map and self.pp > 1
+
+    def stage_index(self):
+        """This shard's pipeline-stage index (0 when PP is off)."""
+        if not self.pp_active:
+            return 0
+        return lax.axis_index(self.stage_axis)
 
     def no_sp(self) -> "ShardCtx":
         """Context with sequence sharding off — for sub-stacks whose
@@ -200,22 +218,32 @@ def make_shard_ctx(mesh: Mesh, *, seq_shard: bool = False) -> ShardCtx:
         tp=tp,
         inside_shard_map=True,
         seq_shard=seq_shard,
+        pp=int(mesh.shape.get(STAGE_AXIS, 1)),
     )
 
 
 def model_axis_only(pspecs: PyTree) -> PyTree:
-    """Project a spec tree onto the model axis (drop pod/data entries).
+    """Project a spec tree onto the in-region axes (drop pod/data).
 
-    These are the shard_map ``in_specs``/``out_specs`` of the dist-TP
-    train step: params enter model-sharded (XLA materializes any FSDP
-    gather at the region boundary) and replicated over pod/data.
+    These are the shard_map ``in_specs``/``out_specs`` of the dist
+    train step: params enter model-sharded — and, under pipeline
+    parallelism, stage-sharded on their stacked layer-group dim — (XLA
+    materializes any FSDP gather at the region boundary) and
+    replicated over pod/data.  Stage entries only exist on meshes that
+    HAVE a stage axis, so the projection is unchanged for every
+    non-pipelined caller.
     """
 
     def one(spec):
         ent = []
         for e in tuple(spec):
             axes = e if isinstance(e, tuple) else (e,)
-            ent.append(MODEL_AXIS if MODEL_AXIS in axes else None)
+            if MODEL_AXIS in axes:
+                ent.append(MODEL_AXIS)
+            elif STAGE_AXIS in axes:
+                ent.append(STAGE_AXIS)
+            else:
+                ent.append(None)
         return P(*ent)
 
     return jax.tree.map(one, pspecs, is_leaf=_IS_SPEC)
@@ -256,6 +284,29 @@ def seq_sharded_mask(pspecs: PyTree) -> PyTree:
     sites if an SP-only layout ever needs it to).
     """
     return model_sharded_mask(pspecs)
+
+
+def stage_sharded_mask(pspecs: PyTree) -> PyTree:
+    """True per leaf iff the spec shards it over the stage axis.
+
+    The pipelined step's gradient correction keys off this exactly like
+    :func:`model_sharded_mask` does for TP: inside shard_map every
+    stage's backward of the stage-replicated objective computes
+    ``∂(Σ_stages φ_s)/∂(local copy)``, so stage-sharded leaves (the
+    stacked layer groups — each stage only ever touches its own block)
+    divide by pp, while stage-replicated leaves (embedding, head,
+    norms, the rest layers) additionally hold only their own stage's
+    paths and must psum over "stage" first.
+    """
+
+    def one(spec):
+        for e in tuple(spec):
+            axes = e if isinstance(e, tuple) else (e,)
+            if STAGE_AXIS in axes:
+                return True
+        return False
+
+    return jax.tree.map(one, pspecs, is_leaf=_IS_SPEC)
 
 
 def validate_tp(cfg, tp: int) -> None:
@@ -331,6 +382,61 @@ def validate_seq_shard(cfg, tp: int, seq_len: int) -> None:
             f"gather-before-scan there (norm/residual/projection work "
             f"between blocks still shards)",
             stacklevel=2,
+        )
+
+
+def stage_layer_ranges(cfg, pp: int) -> Tuple[Tuple[int, int], ...]:
+    """Per-stage ``(first_layer, one_past_last)`` under pp stages.
+
+    Stages split the SCANNED layer groups contiguously — stage s owns
+    groups ``[s·G/pp, (s+1)·G/pp)`` with ``G = n_layers // P`` for a
+    block pattern of period P, i.e. ``P·G/pp`` consecutive layers.
+    The unscanned remainder layers (``n_layers % P``), the final norm
+    and the unembed head ride the LAST stage; the embedding sits on the
+    first (every stage holds a replicated copy — only stage 0's embed
+    output enters the pipeline).
+    """
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    gps = n_groups // max(pp, 1)
+    ranges = [
+        (s * gps * period, (s + 1) * gps * period) for s in range(pp)
+    ]
+    lo, hi = ranges[-1]
+    ranges[-1] = (lo, hi + cfg.n_layers % period)
+    return tuple(ranges)
+
+
+def validate_pp(cfg, pp: int, *, microbatches: int = 0,
+                batch_rows: int = 0) -> None:
+    """Clear error (instead of a shape crash) for a bad ``--pp`` degree.
+
+    Pipeline stages shard the stacked layer-group dim of the scanned
+    params, so the group count ``n_layers // len(block_pattern)`` must
+    divide evenly.  ``microbatches``/``batch_rows`` (when given) check
+    the per-group coded batch splits into whole microbatches.
+    """
+    if pp <= 1:
+        return
+    period = len(cfg.block_pattern)
+    n_groups = cfg.n_layers // period
+    errs = []
+    if n_groups % pp:
+        errs.append(
+            f"n_layers={cfg.n_layers} with block pattern period "
+            f"{period} gives {n_groups} scanned layer groups, not "
+            f"divisible by pp={pp} — each stage must own an equal "
+            f"contiguous group block"
+        )
+    if microbatches > 0 and batch_rows > 0 and batch_rows % microbatches:
+        errs.append(
+            f"per-group batch of {batch_rows} rows not divisible by "
+            f"microbatches={microbatches}"
+        )
+    if errs:
+        raise ValueError(
+            f"{cfg.name}: pipeline parallelism pp={pp} violates "
+            f"divisibility constraints: " + "; ".join(errs)
         )
 
 
@@ -511,6 +617,7 @@ def params_pspecs(
         tp_axis = None
     ep = moe_ep_axis if moe_ep_axis in mesh.shape else MODEL_AXIS
     tp_size = int(mesh.shape.get(MODEL_AXIS, 1))
+    pp_size = int(mesh.shape.get(STAGE_AXIS, 1))
     ssm_heads = (
         (cfg.expand * cfg.d_model) // cfg.ssm_head_dim
         if getattr(cfg, "ssm_head_dim", 0) else 0
@@ -534,11 +641,21 @@ def params_pspecs(
         )
         name = keys[-1] if keys else ""
         leaf_tp = tp and head_ok(name)
-        return _param_rule(
+        spec = _param_rule(
             keys, tuple(leaf.shape), fsdp=fsdp, tp=leaf_tp,
             fsdp_axis=fsdp_axis, tp_axis=tp_axis if leaf_tp else None,
             moe_ep_axis=ep,
         )
+        # pipeline parallelism: the DECODER's stacked layer groups
+        # shard their leading (n_groups) dim over "stage" — each stage
+        # holds its contiguous group block.  The whisper encoder's
+        # groups stay stage-replicated (keys[0] == "encoder"): every
+        # stage runs the encoder on its own microbatch slices.
+        if pp_size > 1 and keys and keys[0] == "groups" and leaf.ndim:
+            ent = list(tuple(spec))
+            ent[0] = STAGE_AXIS
+            spec = P(*ent)
+        return spec
 
     return jax.tree_util.tree_map_with_path(rule, params)
 

@@ -39,6 +39,12 @@ def main():
     ap.add_argument("--remat-policy", default="full",
                     choices=["full", "save_block_outputs"])
     ap.add_argument("--mode", default="2d", choices=["2d", "dp_only"])
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel activation anchors on the "
+                         "pjit path: the inter-block activations pin "
+                         "the seq dim (not the feature dim) to 'model' "
+                         "— GSPMD lowers the TP all-reduces as "
+                         "reduce-scatter/all-gather pairs")
     ap.add_argument("--moe-ep", default="model", choices=["model", "data"])
     ap.add_argument("--microbatch", type=int, default=32)
     ap.add_argument("--out", default="")
@@ -64,6 +70,7 @@ def main():
             flash=args.flash, sharded_accum=args.sharded_accum,
             kv_repeat=args.kv_repeat, remat_policy=args.remat_policy,
             mode=args.mode, moe_ep_axis=args.moe_ep,
+            seq_shard=args.seq_shard,
         )
         results.append(rec)
         if args.out:

@@ -220,12 +220,38 @@ def _make_dist_train_step(
     :func:`sharding.seq_sharded_mask` (the replicated-leaf psum is
     load-bearing there: per-shard grads are seq-block partials).
 
+    A leading "stage" mesh axis of size pp > 1 additionally runs
+    PIPELINE parallelism inside the same shard_map region: the stacked
+    layer groups enter stage-sharded on their leading dim (stage s
+    holds groups ``[s·G/pp, (s+1)·G/pp)`` — :func:`sharding.
+    stage_layer_ranges`), the per-group coded batch splits into
+    ``tcfg.microbatches`` microbatches, and a ``lax.scan`` over the
+    static schedule table (T = microbatches + pp − 1 ticks; stage s
+    works on microbatch t − s at tick t) drives the forward pipeline
+    with ``ppermute`` activation handoffs — reverse-mode AD transposes
+    the scan + ppermute into the mirrored backward pipeline, so the
+    gradient handoffs are the same schedule reversed (GPipe-style
+    fill/drain: bubble fraction (pp − 1)/T).  Off-schedule (stage,
+    tick) cells compute on garbage-over-zeros that a zero mask keeps
+    out of the loss — and, transposed, out of every gradient.  The
+    embedding runs on every stage (only stage 0's result enters the
+    pipeline); the remainder layers + unembed + CE ride the last
+    stage; the whisper encoder runs stage-replicated on the full local
+    batch.  Per-stage gradient buckets then flow through the SAME λ
+    decode: ``stage_correct`` mirrors ``tp_correct`` over "stage"
+    (stage-sharded leaves /pp, stage-replicated leaves psum over
+    "stage" — load-bearing: each stage's grads of the embedding/head/
+    encoder cover only its own paths — then /pp) before the coded
+    psum, and the int8 EF residuals slice stage-wise exactly like the
+    gradient leaf they telescope against.
+
     λ arrives as a runtime (pods, data) operand, so straggler drops and
-    elastic replans at fixed (tolerance, K) never recompile — TP and
-    SP add only static shape specialization, never λ-dependent shapes.
-    The microbatched accumulation of :func:`make_train_step` is not
-    replicated here: the per-group batch is already 1/(n·m) of the
-    global batch.
+    elastic replans at fixed (tolerance, K) never recompile — TP, SP
+    and PP add only static shape specialization, never λ-dependent
+    shapes.  The microbatched accumulation of :func:`make_train_step`
+    is not replicated here: the per-group batch is already 1/(n·m) of
+    the global batch (the PP microbatches split it further for the
+    pipeline, they do not accumulate extra examples).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -247,6 +273,12 @@ def _make_dist_train_step(
     tp = ctx.tp
     if tp > 1:
         shard_lib.validate_tp(cfg, tp)
+    pp = ctx.pp
+    pp_microbatches = 1
+    if pp > 1:
+        shard_lib.validate_pp(cfg, pp,
+                              microbatches=tcfg.microbatches)
+        pp_microbatches = tcfg.microbatches or pp
     # single source of truth: the pjit path's pspec rules, projected
     # onto the model axis for the shard_map region (params enter
     # model-sharded — no replicated entry, no re-shard on exit)
@@ -266,14 +298,138 @@ def _make_dist_train_step(
         is_leaf=lambda x: isinstance(x, P),
     )
 
-    def loss_fn(params, batch):
+    def _pipeline_terms(params, batch):
+        """Microbatched stage pipeline over this group's coded batch.
+
+        Returns ``(loss_local, aux_tot)``, both replicated across
+        stages (via the closing stage psum).  ``loss_local`` matches
+        the non-pipelined ``loss_and_metrics`` loss exactly in fp32:
+        the per-microbatch nll/weight sums are additive and the
+        denominator is shared.  ``aux_tot`` is the per-microbatch MEAN
+        of the MoE aux (exactly the full-batch aux at microbatches=1;
+        for M > 1 the router capacity and the mean-based balance terms
+        see microbatch-sized token counts, the standard pipeline
+        semantic).
+        """
+        M = pp_microbatches
+        tokens = batch["tokens"]
+        Bl, S = tokens.shape
+        if Bl % M:
+            raise ValueError(
+                f"{cfg.name}: pipeline parallelism needs the per-group "
+                f"batch ({Bl} rows) divisible by microbatches={M}"
+            )
+        mb = Bl // M
+        paramsC = tf.cast_params(params, cfg)
+        stage = lax.axis_index(shard_lib.STAGE_AXIS)
+
+        def mb_split(k, v):
+            if k == "positions" and v.ndim == 3 and v.shape[1] == Bl:
+                # M-RoPE positions (3, Bl, S): batch is axis 1
+                r = v.reshape(3, M, mb, v.shape[2])
+                return jnp.moveaxis(r, 1, 0)  # (M, 3, mb, S)
+            if getattr(v, "ndim", 0) == 0 or v.shape[0] != Bl:
+                return None
+            return v.reshape(M, mb, *v.shape[1:])
+
+        split = {k: mb_split(k, v) for k, v in batch.items()
+                 if k != "enc_frames"}
+        split = {k: v for k, v in split.items() if v is not None}
+        enc_split = enc_pos = None
+        if cfg.is_encdec:
+            # the encoder runs ONCE, stage-replicated, on the full
+            # local batch; each stage's encoder grads cover only its
+            # own groups' cross-attention uses and the stage psum of
+            # stage_correct completes the layer-wise sum
+            enc_out, enc_pos = tf.encode_frames(
+                paramsC, cfg, batch["enc_frames"], ctx
+            )
+            enc_split = enc_out.reshape(M, mb, *enc_out.shape[1:])
+
+        S_loc = S // tp if ctx.sp else S
+        T = M + pp - 1
+        perm = [(s, s + 1) for s in range(pp - 1)]
+
+        def tick(carry, t):
+            x_recv, nll_acc, w_acc, aux_acc = carry
+            # stage s works on microbatch t − s; the clip keeps the
+            # dynamic slice in-bounds on off-schedule ticks (their
+            # output is masked away below)
+            cur = jnp.clip(t - stage, 0, M - 1)
+            micro = {
+                k: lax.dynamic_index_in_dim(v, cur, 0, keepdims=False)
+                for k, v in split.items()
+            }
+            x0, pos = tf.embed_tokens(
+                paramsC, cfg, micro["tokens"],
+                positions=micro.get("positions"),
+                visual_embeds=micro.get("visual_embeds"), ctx=ctx,
+            )
+            enc_sl = None
+            if enc_split is not None:
+                enc_sl = lax.dynamic_index_in_dim(
+                    enc_split, cur, 0, keepdims=False
+                )
+            # SPMD uniformity: every stage embeds every tick, but only
+            # stage 0's embedding enters the pipeline — elsewhere the
+            # ppermute'd carry does (AD routes cotangents accordingly)
+            x_in = jnp.where(stage == 0, x0, x_recv)
+            x_out, _, aux_g = tf._apply_groups(
+                paramsC["groups"], cfg, x_in, pos, enc_sl, enc_pos,
+                ctx=ctx,
+            )
+            nll_sum, w_sum, aux_r = tf.head_loss_terms(
+                paramsC, cfg, x_out, micro["targets"],
+                micro.get("weights"), pos, enc_sl, enc_pos, ctx=ctx,
+            )
+            # the static schedule table: cell (stage, tick) is live iff
+            # stage ≤ t < stage + M.  Off-schedule cells compute on
+            # garbage-over-zeros; the zero mask keeps that out of the
+            # loss and (transposed) out of every gradient.
+            valid = ((t >= stage) & (t < stage + M)).astype(jnp.float32)
+            lastf = jnp.where(stage == pp - 1, valid, 0.0)
+            nll_acc = nll_acc + lastf * nll_sum
+            w_acc = w_acc + lastf * w_sum
+            # per-microbatch-mean aux (== full-batch aux at M == 1)
+            aux_acc = aux_acc + (valid * aux_g + lastf * aux_r) / M
+            x_send = lax.ppermute(x_out, shard_lib.STAGE_AXIS, perm)
+            return (x_send, nll_acc, w_acc, aux_acc), None
+
+        zero = jnp.zeros((), jnp.float32)
+        carry0 = (
+            jnp.zeros((mb, S_loc, cfg.d_model), jnp.dtype(cfg.dtype)),
+            zero, zero, zero,
+        )
+        (_, nll_acc, w_acc, aux_acc), _ = lax.scan(
+            tick, carry0, jnp.arange(T)
+        )
+        # only the last stage accumulated loss terms; the stage psum
+        # both collects them and re-replicates (out_specs leave "stage"
+        # unmentioned, which demands replication over it)
+        nll_tot = lax.psum(nll_acc, shard_lib.STAGE_AXIS)
+        w_tot = lax.psum(w_acc, shard_lib.STAGE_AXIS)
+        aux_tot = lax.psum(aux_acc, shard_lib.STAGE_AXIS)
+        denom = batch.get("denom")
+        if denom is None:
+            denom = jnp.maximum(w_tot, 1.0)
+        return nll_tot / denom, aux_tot
+
+    def loss_metrics(params, batch):
+        """(total, metrics) — the one seam both objectives share."""
+        if pp > 1:
+            loss_local, aux_tot = _pipeline_terms(params, batch)
+            total = loss_local + tf.AUX_WEIGHT * aux_tot
+            return total, {"loss": loss_local, "aux_loss": aux_tot}
         return tf.loss_and_metrics(params, cfg, batch, ctx=ctx)
+
+    def loss_fn(params, batch):
+        return loss_metrics(params, batch)
 
     def moe_obj(params, batch, lam_s):
         # λ folded into the data term; aux decoded with uniform weights
         # (a SEPARATE uniform psum in effect: the unweighted two-stage
         # psum below sums λ·∇data + (aw/nm)·∇aux exactly)
-        total, m = tf.loss_and_metrics(params, cfg, batch, ctx=ctx)
+        total, m = loss_metrics(params, batch)
         obj = (lam_s.astype(jnp.float32) * m["loss"]
                + (tf.AUX_WEIGHT / n_groups) * m["aux_loss"])
         return obj, m
@@ -296,6 +452,31 @@ def _make_dist_train_step(
 
         return jax.tree.map(one, g, tp_mask)
 
+    stage_mask = shard_lib.stage_sharded_mask(pspecs)
+
+    def stage_correct(g):
+        """The "stage" twin of :func:`tp_correct`.
+
+        The pipelined objective is replicated across stages (closing
+        stage psum), so each stage's backward yields
+        ``∂(Σ_stages φ_s)/∂(its copy)``: stage-sharded leaves (the
+        layer-group stacks) carry a uniform pp factor; stage-replicated
+        leaves (embedding/head/rest/encoder) additionally hold only
+        their own stage's paths — stage 0's table grad is the embed
+        contribution, the last stage's the unembed one, the encoder's
+        per-stage cross-attention uses — so they psum over "stage"
+        first (load-bearing, not just a de-duplication).
+        """
+        if pp == 1:
+            return g
+
+        def one(gl, sharded):
+            if not sharded:
+                gl = lax.psum(gl, shard_lib.STAGE_AXIS)
+            return gl / pp
+
+        return jax.tree.map(one, g, stage_mask)
+
     def local_grads(params, batch, lam, residual):
         lam_s = lam.reshape(())
         if cfg.is_moe:
@@ -308,7 +489,7 @@ def _make_dist_train_step(
                 params, batch
             )
             psum_lam = lam_s
-        g = tp_correct(g)
+        g = stage_correct(tp_correct(g))
         # decoded loss Σ_ij λ_ij L_ij — matches the single-host weighted
         # loss (weights there carry coeff × λ over the full batch).
         # Under TP the per-group loss is already psum'd over "model"

@@ -124,6 +124,20 @@ def main(argv=None):
                     action="store_const", const=False,
                     help="force sequence parallelism off (overrides "
                          "the config-level default)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stage count (--dist modes): "
+                         "a leading 'stage' mesh axis shards the "
+                         "stacked layer groups and the train step runs "
+                         "a microbatched ppermute pipeline inside the "
+                         "same shard_map as the coded decode.  Needs "
+                         "n_layers//len(block_pattern) divisible by "
+                         "the stage count; composes with --tp, "
+                         "--seq-shard and --dist coded_int8")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="pipeline microbatch count per step (0 = one "
+                         "per stage, the minimum that fills the "
+                         "pipeline).  Must divide the per-group coded "
+                         "batch rows (load D × --part-batch)")
     ap.add_argument("--grad-block", type=int, default=64,
                     help="int8 block size on the edge→master hop")
     ap.add_argument("--checkpoint-dir", default="")
@@ -152,6 +166,10 @@ def main(argv=None):
     if args.dist == "off" and tp > 1:
         raise SystemExit("--tp requires a --dist mode (the single-host "
                          "reference loop has no model mesh axis)")
+    if args.dist == "off" and args.pp > 1:
+        raise SystemExit("--pp requires a --dist mode (the pipeline "
+                         "runs over the 'stage' mesh axis inside "
+                         "shard_map)")
     ctor = CodedCluster.hetero if args.cluster == "hetero" \
         else CodedCluster.homogeneous
     try:
@@ -162,6 +180,8 @@ def main(argv=None):
             mode=args.dist,
             tp=tp,
             seq_shard=args.seq_shard,
+            pp=args.pp,
+            microbatches=args.microbatches,
             seq_len=args.seq_len,
             part_batch=args.part_batch,
             K=args.K,

@@ -450,6 +450,180 @@ def _run_encoder(params, cfg, frames, ctx: ShardCtx = NULL_CTX):
     return _norm(params["encoder"]["enc_norm"], x)
 
 
+# ----------------------------------------------------------------------
+# forward pieces — shared by the monolithic forward() and the pipelined
+# dist train step (launch.steps), which runs them per stage/microbatch
+# ----------------------------------------------------------------------
+def embed_tokens(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    positions: Optional[jnp.ndarray] = None,
+    visual_embeds: Optional[jnp.ndarray] = None,
+    ctx: ShardCtx = NULL_CTX,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Embedding + VLM frontend + default positions + SP seq scatter.
+
+    ``params`` must already be cast (:func:`cast_params`).  Returns
+    ``(x, positions)`` with ``x`` in the residual-stream layout the
+    block stack consumes (seq-sharded under SP) and ``positions``
+    full-length — blocks gather before attending.
+    """
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens, ctx)
+    if visual_embeds is not None:
+        # VLM stub: frontend embeddings replace the first n_vis positions
+        n_vis = visual_embeds.shape[1]
+        x = jnp.concatenate(
+            [visual_embeds.astype(x.dtype), x[:, n_vis:]], axis=1
+        )
+    if positions is None:
+        positions = jnp.arange(S)[None].repeat(B, 0)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions, (3, B, S))
+    # SP: the residual stream between blocks lives seq-sharded over
+    # "model" — slice after the seq-global embedding/frontend work
+    x = ctx.scatter_seq(x)
+    return x, positions
+
+
+def encode_frames(
+    params: PyTree, cfg: ModelConfig, enc_frames: jnp.ndarray,
+    ctx: ShardCtx = NULL_CTX,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Whisper encoder pass → ``(enc_out, enc_positions)``.
+
+    ``params`` must already be cast.  The encoder stays out of the SP
+    regime: enc_len need not divide tp and cross-attention consumes the
+    full encoder sequence.
+    """
+    enc_out = _run_encoder(params, cfg, enc_frames, ctx.no_sp())
+    return enc_out, jnp.arange(enc_out.shape[1])
+
+
+def _apply_groups(
+    group_params: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    enc_out: Optional[jnp.ndarray] = None,
+    enc_pos: Optional[jnp.ndarray] = None,
+    ctx: ShardCtx = NULL_CTX,
+    return_cache: bool = False,
+) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+    """Scan the stacked layer groups over ``x``.
+
+    ``group_params`` may be the full ``params["groups"]`` stack or a
+    stage-local slice of it (pipeline parallelism) — the scan length is
+    whatever leading dim the stack carries.  Returns
+    ``(x, caches, aux_sum)``.
+    """
+    period = len(cfg.block_pattern)
+
+    def group_body(x, gp):
+        caches = {}
+        aux_g = jnp.zeros((), jnp.float32)
+        for k in range(period):
+            kind = cfg.block_pattern[k]
+            x, ce, aux = _layer_apply(
+                gp[f"p{k}"], x, kind, cfg, positions,
+                enc_out, enc_pos, ctx=ctx,
+            )
+            x = anchor_activations(x)
+            # only the prefill path wants K/V back; the loss path must
+            # not stack full-seq cache entries through the scan's ys
+            caches[f"p{k}"] = ce if return_cache else ()
+            aux_g = aux_g + aux
+        return x, (caches, aux_g)
+
+    body = _remat_wrap(group_body, cfg)
+    x, (g_caches, g_aux) = lax.scan(body, x, group_params)
+    return x, g_caches, g_aux.sum()
+
+
+def _apply_rest(
+    params: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    enc_out: Optional[jnp.ndarray] = None,
+    enc_pos: Optional[jnp.ndarray] = None,
+    ctx: ShardCtx = NULL_CTX,
+) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+    """The unscanned remainder layers (``n_layers % period``)."""
+    rest_caches: Dict = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for k in range(cfg.n_layers % len(cfg.block_pattern)):
+        kind = cfg.block_pattern[k]
+        x, ce, aux = _layer_apply(
+            params["rest"][f"r{k}"], x, kind, cfg, positions,
+            enc_out, enc_pos, ctx=ctx,
+        )
+        rest_caches[f"r{k}"] = ce
+        aux_total = aux_total + aux
+    return x, rest_caches, aux_total
+
+
+def _ce_nll(
+    logits: jnp.ndarray, targets: jnp.ndarray, cfg: ModelConfig,
+    ctx: ShardCtx = NULL_CTX,
+) -> jnp.ndarray:
+    """Per-token negative log-likelihood (B, S).
+
+    TP (ctx active, untied head): logits arrive vocab-parallel and the
+    decode spends exactly ONE fused psum over the model axis (logsumexp
+    partials + target log-likelihood together).
+    """
+    V = logits.shape[-1]
+    if ctx.active and V != cfg.vocab:
+        # vocab-parallel CE: max-shift via pmax (stop_gradient — the
+        # shift cancels analytically), then one psum carries both the
+        # local exp-sums and this shard's masked target logit
+        m = ctx.pmax(lax.stop_gradient(jnp.max(logits, axis=-1)))
+        s = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+        v0 = ctx.axis_index() * V
+        tloc = targets - v0
+        valid = (tloc >= 0) & (tloc < V)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(tloc, 0, V - 1)[..., None], axis=-1
+        )[..., 0]
+        ll = jnp.where(valid, ll, 0.0)
+        s, ll = ctx.psum(jnp.stack([s, ll]))
+        lse = jnp.log(s) + m
+    else:
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1
+        )[..., 0]
+    return lse - ll
+
+
+def head_loss_terms(
+    params: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    targets: jnp.ndarray,
+    weights: Optional[jnp.ndarray],
+    positions: jnp.ndarray,
+    enc_out: Optional[jnp.ndarray] = None,
+    enc_pos: Optional[jnp.ndarray] = None,
+    ctx: ShardCtx = NULL_CTX,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Rest layers + unembed + weighted CE on a block-stack output.
+
+    The pipelined train step runs this on the LAST stage only (masked
+    elsewhere); ``params`` must already be cast.  Returns the un-
+    normalized terms ``(Σ nll·w, Σ w, aux_rest)`` so the caller picks
+    the denominator (the coded paths use the fixed batch "denom").
+    """
+    x, _, aux = _apply_rest(params, cfg, x, positions, enc_out, enc_pos,
+                            ctx=ctx)
+    logits = anchor_logits(_unembed(params, cfg, x, ctx))
+    nll = _ce_nll(logits, targets, cfg, ctx)
+    w = weights if weights is not None else jnp.ones_like(nll)
+    return (nll * w).sum(), w.sum(), aux
+
+
 def forward(
     params: PyTree,
     cfg: ModelConfig,
@@ -463,64 +637,24 @@ def forward(
 ) -> Any:
     """Full-sequence forward.  Returns logits (B,S,V) [+ cache, aux]."""
     ctx = ctx or NULL_CTX
-    B, S = tokens.shape
     params = cast_params(params, cfg)
-    x = _embed(params, cfg, tokens, ctx)
-    if visual_embeds is not None:
-        # VLM stub: frontend embeddings replace the first n_vis positions
-        n_vis = visual_embeds.shape[1]
-        x = jnp.concatenate(
-            [visual_embeds.astype(x.dtype), x[:, n_vis:]], axis=1
-        )
-    if positions is None:
-        positions = jnp.arange(S)[None].repeat(B, 0)
-        if cfg.mrope_sections:
-            positions = jnp.broadcast_to(positions, (3, B, S))
     enc_out = enc_pos = None
     if cfg.is_encdec:
         if enc_frames is None:
             raise ValueError("encoder-decoder model needs enc_frames")
-        # the encoder stays out of the SP regime: enc_len need not
-        # divide tp and cross-attention consumes the full encoder seq
-        enc_out = _run_encoder(params, cfg, enc_frames, ctx.no_sp())
-        enc_pos = jnp.arange(enc_out.shape[1])
-
-    # SP: the residual stream between blocks lives seq-sharded over
-    # "model" — slice after the seq-global embedding/frontend work
-    # (positions stay full-length; blocks gather before attending)
-    x = ctx.scatter_seq(x)
-
-    P = len(cfg.block_pattern)
-    aux_total = jnp.zeros((), jnp.float32)
-
-    def group_body(x, group_params):
-        caches = {}
-        aux_g = jnp.zeros((), jnp.float32)
-        for k in range(P):
-            kind = cfg.block_pattern[k]
-            x, ce, aux = _layer_apply(
-                group_params[f"p{k}"], x, kind, cfg, positions,
-                enc_out, enc_pos, ctx=ctx,
-            )
-            x = anchor_activations(x)
-            # only the prefill path wants K/V back; the loss path must
-            # not stack full-seq cache entries through the scan's ys
-            caches[f"p{k}"] = ce if return_cache else ()
-            aux_g = aux_g + aux
-        return x, (caches, aux_g)
-
-    body = _remat_wrap(group_body, cfg)
-    x, (g_caches, g_aux) = lax.scan(body, x, params["groups"])
-    aux_total = aux_total + g_aux.sum()
-    rest_caches = {}
-    for k in range(cfg.n_layers % P):
-        kind = cfg.block_pattern[k]
-        x, ce, aux = _layer_apply(
-            params["rest"][f"r{k}"], x, kind, cfg, positions,
-            enc_out, enc_pos, ctx=ctx,
-        )
-        rest_caches[f"r{k}"] = ce
-        aux_total = aux_total + aux
+        enc_out, enc_pos = encode_frames(params, cfg, enc_frames, ctx)
+    x, positions = embed_tokens(
+        params, cfg, tokens, positions=positions,
+        visual_embeds=visual_embeds, ctx=ctx,
+    )
+    x, g_caches, g_aux = _apply_groups(
+        params["groups"], cfg, x, positions, enc_out, enc_pos,
+        ctx=ctx, return_cache=return_cache,
+    )
+    x, rest_caches, rest_aux = _apply_rest(
+        params, cfg, x, positions, enc_out, enc_pos, ctx=ctx
+    )
+    aux_total = g_aux + rest_aux
     if last_only:
         # the final position lives on the last SP shard — re-gather
         # first (serve paths run with ctx inactive; this keeps the SP
@@ -561,29 +695,7 @@ def loss_and_metrics(
         visual_embeds=batch.get("visual_embeds"),
         ctx=ctx,
     )
-    targets = batch["targets"]
-    V = logits.shape[-1]
-    if ctx.active and V != cfg.vocab:
-        # vocab-parallel CE: max-shift via pmax (stop_gradient — the
-        # shift cancels analytically), then one psum carries both the
-        # local exp-sums and this shard's masked target logit
-        m = ctx.pmax(lax.stop_gradient(jnp.max(logits, axis=-1)))
-        s = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
-        v0 = ctx.axis_index() * V
-        tloc = targets - v0
-        valid = (tloc >= 0) & (tloc < V)
-        ll = jnp.take_along_axis(
-            logits, jnp.clip(tloc, 0, V - 1)[..., None], axis=-1
-        )[..., 0]
-        ll = jnp.where(valid, ll, 0.0)
-        s, ll = ctx.psum(jnp.stack([s, ll]))
-        lse = jnp.log(s) + m
-    else:
-        lse = jax.nn.logsumexp(logits, axis=-1)
-        ll = jnp.take_along_axis(
-            logits, targets[..., None], axis=-1
-        )[..., 0]
-    nll = lse - ll
+    nll = _ce_nll(logits, batch["targets"], cfg, ctx)
     w = batch.get("weights")
     if w is None:
         w = jnp.ones_like(nll)

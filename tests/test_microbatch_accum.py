@@ -1,0 +1,105 @@
+"""Microbatched gradient accumulation == one full-batch step.
+
+Covers the ``lax.scan`` accumulation path of
+:func:`repro.launch.steps.make_train_step` (``tcfg.microbatch > 0``):
+
+  * the fixed-denominator (coded) path — microbatch losses SUM to the
+    full-batch loss with no ``/n_micro`` (the loss is linear in the
+    per-example weights over a shared normalizer), so accumulated
+    gradients must equal the single-full-batch gradients exactly in
+    fp32,
+  * the mean path (no ``denom`` in the batch) — per-microbatch means
+    averaged over ``n_micro``; with uniform weights and equal
+    microbatch sizes this equals the full-batch mean,
+  * the M-RoPE split path (qwen2-vl): positions ride batch axis 1 of a
+    ``(3, B, S)`` array, so the scan split must reshape on axis 1 and
+    move the microbatch axis to the front.
+
+The accumulation body is deterministic — no dropout, no RNG consumed
+per microbatch — so there is no RNG-split path to cover; these cases
+plus the denominator choice exhaust the scan's behavior.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_smoke_config
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tf
+from repro.optim import make_optimizer
+
+B, S = 4, 16
+
+
+def _batch(cfg, seed, with_denom=True, mrope=False):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32),
+        "targets": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32),
+        "weights": jnp.ones((B, S), jnp.float32),
+    }
+    if with_denom:
+        batch["denom"] = jnp.float32(B * S)
+    if mrope:
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32), (3, B, S))
+        batch["positions"] = jnp.asarray(pos)
+    return batch
+
+
+def _one_step(cfg, tcfg, batch, seed=0):
+    opt = make_optimizer("sgd")
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+    step = jax.jit(steps_lib.make_train_step(cfg, tcfg, optimizer=opt))
+    new_params, _, m = step(params, opt_state, batch, jnp.asarray(0))
+    return new_params, float(m["loss"])
+
+
+def _assert_match(cfg, with_denom, mrope=False, atol=2e-6):
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    batch = _batch(cfg, seed=7, with_denom=with_denom, mrope=mrope)
+    base = TrainConfig(optimizer="sgd", lr=0.05, total_steps=10,
+                       warmup_steps=1, grad_clip=0.0)
+    full_p, full_l = _one_step(cfg, base, batch)
+    acc_p, acc_l = _one_step(
+        cfg, dataclasses.replace(base, microbatch=2), batch)
+    assert abs(full_l - acc_l) < atol, (full_l, acc_l)
+    for a, b in zip(jax.tree.leaves(full_p), jax.tree.leaves(acc_p)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=0, atol=atol)
+
+
+def test_accum_matches_full_batch_denom_path():
+    _assert_match(get_smoke_config("llama3-8b"), with_denom=True)
+
+
+def test_accum_matches_full_batch_mean_path():
+    # uniform weights + equal microbatch sizes: the per-microbatch
+    # means averaged over n_micro equal the full-batch mean
+    _assert_match(get_smoke_config("llama3-8b"), with_denom=False)
+
+
+def test_accum_matches_full_batch_mrope_split():
+    _assert_match(get_smoke_config("qwen2-vl-2b"), with_denom=True,
+                  mrope=True)
+
+
+def test_accum_loss_sums_not_averages_on_denom_path():
+    """The coded contract: with a fixed denom the metric is the SUM of
+    microbatch losses (already the full-batch loss), never /n_micro."""
+    cfg = dataclasses.replace(get_smoke_config("llama3-8b"),
+                              dtype="float32")
+    batch = _batch(cfg, seed=9, with_denom=True)
+    base = TrainConfig(optimizer="sgd", lr=0.05, total_steps=10,
+                       warmup_steps=1, grad_clip=0.0)
+    _, full_l = _one_step(cfg, base, batch)
+    _, acc_l = _one_step(
+        cfg, dataclasses.replace(base, microbatch=1), batch)  # 4 micros
+    assert acc_l == pytest.approx(full_l, abs=2e-6)

@@ -1,0 +1,264 @@
+"""Pipeline-parallel parity: the dist-PP train step == the single-device
+step, for EVERY assigned architecture.
+
+Construction: on the 8-device (stage=2, pod=2, data=2) test mesh the
+global batch is one quarter-batch tiled 4× with λ_ij = 1/4, so the
+coded decode Σ λ_ij G_ij equals the plain gradient of that quarter —
+which the single-device ``make_train_step`` computes directly.  The
+pipelined step additionally splits each group's quarter into
+microbatches and streams them through the stage pipeline (ppermute
+handoffs, ``lax.scan`` over the static schedule table), so one sgd step
+matching loss AND updated params proves, per arch family:
+
+  * the tick schedule + validity masking (off-schedule cells never leak
+    into the loss or, transposed, into any gradient),
+  * the stage-sharded layer-group stacks (each stage scans only its own
+    contiguous block) and the ``stage_correct`` gradient decode —
+    stage-sharded leaves /pp, stage-replicated leaves (embedding, head,
+    rest layers, final norm) psum'd over "stage" first,
+  * tied embeddings whose table grad assembles from stage 0's embed
+    path + the last stage's unembed path (qwen2-vl, mamba2,
+    granite-moe),
+  * the stage-replicated whisper encoder (runs once on the full local
+    batch; per-stage cross-attention grads complete via the stage
+    psum), M-RoPE microbatch slicing on batch axis 1 (qwen2-vl),
+  * MoE at microbatches=1 (router capacity and the mean-based aux are
+    token-count dependent, so exact parity pins M=1 — the pipeline
+    still runs pp ticks end to end),
+  * composition: PP∘TP (Megatron column/row-parallel inside each
+    stage), PP∘TP∘SP (seq-sharded activation handoffs — the ppermute
+    carries the LOCAL seq block), PP∘int8 (per-stage EF residuals ride
+    the stage-sliced gradient leaf), and PP∘TP∘SP∘int8 all at once.
+
+A separate driver test asserts the zero-recompile invariant holds with
+PP on across a forced straggler drop + JNCSS replan at 16 devices.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import ARCH_IDS, get_smoke_config
+    from repro.dist.compression import init_pod_residuals
+    from repro.dist.mesh import make_test_mesh
+    from repro.launch import steps as steps_lib
+    from repro.models import transformer as tf
+    from repro.optim import make_optimizer
+
+    BQ, S = 2, 16                    # group batch: what one group sees
+
+    # smoke depths with too few layer groups for 2 stages get deepened
+    # (pp shards the SCANNED groups; G must divide by the stage count)
+    DEEPEN = {"granite-8b": 4, "gemma3-27b": 14, "recurrentgemma-2b": 8}
+    # MoE: capacity + mean-based aux are token-count dependent — exact
+    # parity pins the microbatch count to 1 (still a real pp-tick run)
+    MOE_M1 = {"granite-moe-3b-a800m", "llama4-maverick-400b-a17b"}
+
+    def build_batches(cfg, seed, groups, bq=BQ):
+        rng = np.random.default_rng(seed)
+        tok = rng.integers(0, cfg.vocab, size=(bq, S)).astype(np.int32)
+        tgt = rng.integers(0, cfg.vocab, size=(bq, S)).astype(np.int32)
+        quarter = {
+            "tokens": tok,
+            "targets": tgt,
+            "weights": np.ones((bq, S), np.float32),
+            "denom": np.float32(bq * S),
+        }
+        if cfg.is_encdec:
+            quarter["enc_frames"] = rng.normal(
+                size=(bq, cfg.enc_len, cfg.d_model)).astype(np.float32)
+        full = {
+            k: (v if np.ndim(v) == 0
+                else np.tile(v, (groups,) + (1,) * (np.ndim(v) - 1)))
+            for k, v in quarter.items()
+        }
+        return ({k: jnp.asarray(v) for k, v in quarter.items()},
+                {k: jnp.asarray(v) for k, v in full.items()})
+
+    def run_case(tag, cfg, seed, stages=2, pods=2, data=2, tp=1,
+                 microbatches=2, compressed=False, seq_shard=False,
+                 bq=BQ):
+        # fp32 compute: the acceptance criterion is fp32 parity — bf16
+        # activations would drown the comparison in cast noise
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        mesh = make_test_mesh(pods, data, tp, stages=stages)
+        groups = pods * data
+        tcfg = TrainConfig(
+            optimizer="sgd", lr=0.05, total_steps=10, warmup_steps=1,
+            grad_clip=0.0,
+            grad_compression="int8" if compressed else "none",
+            seq_shard_activations=seq_shard,
+            pp_stages=stages, microbatches=microbatches,
+        )
+        opt = make_optimizer("sgd")
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt.init(params)
+        quarter, full = build_batches(cfg, seed, groups, bq=bq)
+
+        ref_step = jax.jit(
+            steps_lib.make_train_step(cfg, tcfg, optimizer=opt))
+        ref_params, _, ref_m = ref_step(
+            params, opt_state, quarter, jnp.asarray(0))
+
+        dist_step = jax.jit(
+            steps_lib._make_dist_train_step(cfg, tcfg, mesh,
+                                            optimizer=opt))
+        lam = jnp.full((pods, data), 1.0 / groups, jnp.float32)
+        residual = (init_pod_residuals(params, pods) if compressed
+                    else {})
+        pp_params, _, _, pp_m = dist_step(
+            params, opt_state, full, lam, residual, jnp.asarray(0))
+
+        atol_l, atol_p = (5e-3, 5e-3) if compressed else (2e-5, 3e-5)
+        dl = abs(float(ref_m["loss"]) - float(pp_m["loss"]))
+        assert dl < atol_l, (tag, "loss", float(ref_m["loss"]),
+                             float(pp_m["loss"]))
+        flat_r = jax.tree.leaves(ref_params)
+        flat_t = jax.tree.leaves(pp_params)
+        assert len(flat_r) == len(flat_t)
+        for a, b in zip(flat_r, flat_t):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=0, atol=atol_p, err_msg=f"{tag} param mismatch")
+        print(f"[pp-parity] {tag}: OK (dloss={dl:.2e})", flush=True)
+
+    n = 0
+    for i, arch in enumerate(ARCH_IDS):
+        cfg = get_smoke_config(arch)
+        if arch in DEEPEN:
+            cfg = dataclasses.replace(cfg, n_layers=DEEPEN[arch])
+        run_case(arch, cfg, seed=1000 + i,
+                 microbatches=1 if arch in MOE_M1 else 2)
+        n += 1
+    # ---- compositions (llama3: the canonical dense arch) -------------
+    base = get_smoke_config("llama3-8b")
+    # PP ∘ TP: Megatron column/row-parallel inside each stage
+    run_case("llama3-8b@pp2tp2", base, seed=2001,
+             pods=2, data=1, tp=2)
+    # PP ∘ TP ∘ SP: the ppermute handoff carries the LOCAL seq block
+    run_case("llama3-8b@pp2tp2sp", base, seed=2002,
+             pods=2, data=1, tp=2, seq_shard=True)
+    # PP ∘ int8: per-stage EF residuals follow the stage-sliced leaf
+    run_case("llama3-8b@pp2int8", base, seed=2003, compressed=True)
+    # the full stack at once: PP ∘ TP ∘ SP ∘ int8
+    run_case("llama3-8b@pp2tp2sp-int8", base, seed=2004,
+             pods=2, data=1, tp=2, seq_shard=True, compressed=True)
+    # four microbatches per stage (schedule longer than the pipeline) —
+    # needs a 4-row group batch so M=4 divides the rows
+    run_case("llama3-8b@pp2m4",
+             dataclasses.replace(base, n_layers=4), seed=2005,
+             microbatches=4, bq=4)
+    print(f"PARITY_OK {n}")
+    """
+)
+
+
+def _run(args, timeout=1500, extra_env=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if extra_env:
+        env.update(extra_env)
+    r = subprocess.run(
+        args, capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    return r
+
+
+def test_pp_parity_all_archs():
+    r = _run([sys.executable, "-c", _SCRIPT])
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
+    assert "PARITY_OK 10" in r.stdout
+
+
+def test_pp_zero_recompile_across_drop_and_replan(tmp_path):
+    """Forced straggler drop + JNCSS replan with PP on: one executable.
+
+    Same (2 edges × 4 workers) topology as the TP acceptance run, with
+    the stage axis at 2 — 16 forced host devices.  λ stays a runtime
+    operand; the pipeline adds only static shape specialization.
+    """
+    r = _run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "llama3-8b", "--smoke", "--scheme", "hgc_jncss",
+         "--cluster", "hetero", "--n-edges", "2", "--n-workers", "4",
+         "--pp", "2", "--steps", "4", "--seq-len", "16",
+         "--log-every", "4", "--optimizer", "sgd", "--lr", "0.05",
+         "--replan-every", "3", "--force-drop-edge", "1",
+         "--force-drop-step", "2", "--dist", "coded",
+         "--expect-zero-recompile"],
+        extra_env={"XLA_FLAGS": "--xla_force_host_platform_device_count=16"},
+    )
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-2000:]}"
+    assert "jit cache entries: 1" in r.stdout
+    assert "pipeline stages 2" in r.stdout
+
+
+def test_validate_pp_clear_errors():
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.sharding import validate_pp
+
+    cfg = get_smoke_config("granite-8b")  # 3 layer groups
+    with pytest.raises(ValueError, match="divisib"):
+        validate_pp(cfg, 2)
+    validate_pp(cfg, 3)  # 3 groups over 3 stages: fine
+    cfg2 = get_smoke_config("llama3-8b")  # 2 groups
+    validate_pp(cfg2, 2)
+    with pytest.raises(ValueError, match="microbatches"):
+        validate_pp(cfg2, 2, microbatches=3, batch_rows=4)
+    validate_pp(cfg2, 2, microbatches=2, batch_rows=4)
+
+
+def test_stage_layer_ranges():
+    import dataclasses
+
+    from repro.configs.registry import get_smoke_config
+    from repro.dist.sharding import stage_layer_ranges
+
+    cfg = dataclasses.replace(get_smoke_config("gemma3-27b"),
+                              n_layers=14)  # period 6: G=2, rest=2
+    ranges = stage_layer_ranges(cfg, 2)
+    assert ranges == ((0, 6), (6, 14))  # last stage owns the remainder
+    cfg2 = get_smoke_config("llama3-8b")  # 2 groups of 1 layer
+    assert stage_layer_ranges(cfg2, 2) == ((0, 1), (1, 2))
+    assert stage_layer_ranges(cfg2, 1) == ((0, 2),)
+
+
+def test_pp_flag_rejects_bad_degree():
+    r = _run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "granite-8b", "--smoke", "--steps", "1",
+         "--scheme", "hgc", "--s-e", "0", "--s-w", "0",
+         "--dist", "coded", "--n-edges", "2", "--n-workers", "2",
+         "--pp", "2"],
+        extra_env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert r.returncode != 0
+    assert "divisib" in (r.stderr + r.stdout)
+
+
+def test_pp_flag_requires_dist_mode():
+    r = _run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "llama3-8b", "--smoke", "--steps", "1",
+         "--dist", "off", "--pp", "2"],
+    )
+    assert r.returncode != 0
+    assert "requires a --dist mode" in (r.stderr + r.stdout)
