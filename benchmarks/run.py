@@ -31,6 +31,7 @@ MODULES = [
     "benchmarks.bench_trainstep_tp",      # CI regression probe (dist TP)
     "benchmarks.bench_trainstep_sp",      # CI regression probe (seq-par)
     "benchmarks.bench_trainstep_pp",      # CI regression probe (pipeline)
+    "benchmarks.bench_orchestrator",      # CI regression probe (service)
 ]
 
 QUICK_MODULES = [
@@ -41,6 +42,7 @@ QUICK_MODULES = [
     "benchmarks.bench_trainstep_tp",
     "benchmarks.bench_trainstep_sp",
     "benchmarks.bench_trainstep_pp",
+    "benchmarks.bench_orchestrator",
     "benchmarks.bench_roofline",
 ]
 
@@ -61,6 +63,9 @@ def main(argv=None) -> None:
         os.environ["BENCH_TRAINSTEP_TP_OUT"] = f"{root}_tp{ext or '.json'}"
         os.environ["BENCH_TRAINSTEP_SP_OUT"] = f"{root}_sp{ext or '.json'}"
         os.environ["BENCH_TRAINSTEP_PP_OUT"] = f"{root}_pp{ext or '.json'}"
+        os.environ["BENCH_ORCHESTRATOR_OUT"] = os.path.join(
+            os.path.dirname(args.out) or ".", "BENCH_orchestrator.json"
+        )
         os.environ["BENCH_PARETO_OUT"] = os.path.join(
             os.path.dirname(args.out) or ".", "BENCH_pareto.json"
         )

@@ -45,12 +45,13 @@ from repro.api.planner import (
     get_planner,
     planner_for_scheme,
 )
-from repro.api.session import CodedSession, build_coded_batch
+from repro.api.session import CodedSession, ReplanError, build_coded_batch
 
 __all__ = [
     # the object model
     "CodedCluster",
     "CodedSession",
+    "ReplanError",
     "Plan",
     "Planner",
     "JNCSSPlanner",

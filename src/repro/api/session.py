@@ -51,6 +51,26 @@ from repro.optim import make_optimizer
 PyTree = Any
 
 
+class ReplanError(RuntimeError):
+    """A replan/shrink produced a plan the deployed session cannot run.
+
+    Raised INSTEAD of adopting the offending plan — the session keeps
+    training on its previous code, so a supervisor (the orchestrator)
+    can log the failure and keep the episode alive.  Structured fields:
+
+      * ``constraint`` — which deployment constraint broke:
+        ``"uniform_load"`` (grouped per-edge loads under a dist mode),
+        ``"pp"`` (pipeline row/stage divisibility for the new load D),
+        or ``"topology"`` (a supplied cluster's tree does not match),
+      * ``topo`` — the surviving :class:`Topology` the plan was for.
+    """
+
+    def __init__(self, message: str, *, constraint: str, topo):
+        super().__init__(message)
+        self.constraint = constraint
+        self.topo = topo
+
+
 def _step_rng(seed: int, step: int) -> np.random.Generator:
     """Per-step straggler RNG: resume replays the exact pattern sequence
     (bit-for-bit kill/resume needs history-independent sampling)."""
@@ -490,11 +510,23 @@ class CodedSession:
             return
         loads = getattr(code, "loads", None)
         if loads is not None and len(set(loads)) > 1:
+            counts: Dict[int, int] = {}
+            for d in loads:
+                counts[int(d)] = counts.get(int(d), 0) + 1
+            majority = max(counts, key=lambda d: (counts[d], -d))
+            edge, load = next(
+                (i, int(d)) for i, d in enumerate(loads)
+                if int(d) != majority
+            )
             raise ValueError(
-                f"dist modes need uniform per-worker loads, but the "
-                f"grouped plan carries per-edge loads {tuple(loads)} — "
-                f"use mode='off' (or the simulator) for this planner "
-                f"on this cluster"
+                f"dist mode {self.mode!r} shards the coded batch evenly "
+                f"over the (pod, data) mesh, which requires every worker "
+                f"to carry the same load — but this grouped plan gives "
+                f"edge {edge} load D={load} while the majority of edges "
+                f"carry D={majority} (per-edge loads: {tuple(loads)}). "
+                f"Use a uniform planner, regroup the cluster so loads "
+                f"match, or run mode='off'; see docs/planners.md "
+                f"(grouped codes under dist modes)"
             )
 
     def _iteration(self, step: int, force_drop_edge: int = -1,
@@ -512,6 +544,16 @@ class CodedSession:
                 i for i in range(topo.n) if i != force_drop_edge
             )[: topo.n - code.tol.s_e]
         self.cluster.observe(wt)
+        metrics = self._execute(step, fast_e, fast_w, batch)
+        metrics["sim_iter_ms"] = t_iter
+        metrics["fast_edges"] = fast_e
+        return metrics
+
+    def _execute(self, step: int, fast_e, fast_w, batch=None) -> Dict:
+        """Dispatch ONE compiled train step under a given completion
+        set — the shared tail of :meth:`_iteration` (simulated patterns)
+        and :meth:`external_step` (orchestrator-observed patterns)."""
+        code, topo = self.code, self.cluster.topo
         if batch is None:
             batch = self.build_batch(fast_e, fast_w)
         if self._mesh is None:
@@ -537,9 +579,47 @@ class CodedSession:
             )
         self.losses.append(float(metrics["loss"]))
         self._step = step + 1
-        metrics = dict(metrics)
-        metrics["sim_iter_ms"] = t_iter
-        metrics["fast_edges"] = fast_e
+        return dict(metrics)
+
+    def external_step(self, fast_e, fast_w, *, worker_totals=None,
+                      sim_iter_ms: float = 0.0, batch=None) -> Dict:
+        """One train step under an EXTERNALLY-observed completion set.
+
+        The orchestrator's entry point: instead of *simulating* a
+        straggler pattern from the cluster model (:meth:`step`), the
+        caller supplies the completion set it actually waited for —
+        ``fast_e`` (edge indices) and ``fast_w`` (per-edge fast-worker
+        tuples, indexed by edge for ALL edges) — plus, optionally, the
+        flat per-worker runtime observations to feed the detector.
+        Identical coded semantics: only the λ operand changes, so the
+        compiled step is reused (zero recompiles), and replaying the
+        same completion sets into a fresh session reproduces the same
+        losses bit-for-bit.
+        """
+        if self.cluster is None:
+            raise RuntimeError("serve-only session (cluster=None) "
+                               "cannot train")
+        topo = self.cluster.topo
+        need_e = topo.n - self.code.tol.s_e
+        if len(set(fast_e)) < need_e:
+            raise ValueError(
+                f"completion set has {len(set(fast_e))} edges; the "
+                f"deployed code needs >= {need_e}"
+            )
+        for i in fast_e:
+            need_w = topo.m[i] - self.code.tol.s_w_of(i)
+            if len(set(fast_w[i])) < need_w:
+                raise ValueError(
+                    f"edge {i}: completion set has "
+                    f"{len(set(fast_w[i]))} workers; the deployed code "
+                    f"needs >= {need_w}"
+                )
+        if worker_totals is not None:
+            self.cluster.observe(worker_totals)
+        metrics = self._execute(self._step, tuple(fast_e),
+                                [tuple(w) for w in fast_w], batch)
+        metrics["sim_iter_ms"] = float(sim_iter_ms)
+        metrics["fast_edges"] = tuple(fast_e)
         return metrics
 
     def step(self, batch=None) -> Dict:
@@ -612,23 +692,41 @@ class CodedSession:
                   f"jit cache entries: {cache_entries}")
         return self.report(first_step=start)
 
-    def replan(self, planner: Any = None):
+    def replan(self, planner: Any = None, cluster: Any = None):
         """Re-run the planner on the detector-updated cluster model;
         a stable plan reuses the deployed code and part streams.
 
         ``planner`` swaps the session's strategy first (string or
         instance, as in the constructor) — tolerance and λ are runtime
         operands, so a swap that lands on the same code shapes keeps
-        the compiled step (zero recompiles)."""
+        the compiled step (zero recompiles).  ``cluster`` swaps the
+        session's cluster model first — the orchestrator's fit-replan
+        hook: hand in ``CodedCluster.from_observations(...)`` and the
+        plan prices MEASURED delays instead of priors.  The swapped
+        cluster must keep the deployed topology (a topology change is
+        :meth:`shrink`, not a replan).
+
+        A plan the deployed session cannot run (grouped loads under a
+        dist mode, a pipeline-incompatible load) raises a structured
+        :class:`ReplanError` and leaves the session on its previous
+        plan."""
         if planner is not None:
             self.planner = get_planner(planner)
+        if cluster is not None:
+            if cluster.topo != self.cluster.topo:
+                raise ReplanError(
+                    f"replan cluster has topology m={cluster.topo.m}, "
+                    f"session is deployed on m={self.cluster.topo.m} — "
+                    f"use shrink() for topology changes",
+                    constraint="topology", topo=self.cluster.topo,
+                )
+            self.cluster = cluster
         plan = self.planner.plan(
             self.cluster.updated_params(self.code.load), self.code.K,
             seed=self.seed, reuse=self.code,
         )
         if plan.code is not self.code:
-            self._require_dist_uniform_load(plan.code)
-            self._validate_pp(plan.code)
+            self._check_deployable(plan.code)
             if self.verbose:
                 print(f"[train] replan: tolerance → "
                       f"(s_e={plan.tol.s_e}, s_w={plan.tol.s_w}), "
@@ -643,6 +741,22 @@ class CodedSession:
                             self.part_batch, self.seq_len, self.seed)
         return self.plan
 
+    def _check_deployable(self, code) -> None:
+        """Validate a REPLACEMENT code against the deployed session;
+        failures surface as structured :class:`ReplanError` (the
+        construction path keeps plain ``ValueError`` — there is no
+        surviving plan to fall back to at construction time)."""
+        try:
+            self._require_dist_uniform_load(code)
+        except ValueError as err:
+            raise ReplanError(str(err), constraint="uniform_load",
+                              topo=self.cluster.topo) from err
+        try:
+            self._validate_pp(code)
+        except ValueError as err:
+            raise ReplanError(str(err), constraint="pp",
+                              topo=self.cluster.topo) from err
+
     def shrink(self, dead_edges=(), dead_workers=()):
         """Drop PERMANENTLY failed nodes, replan, and keep training.
 
@@ -655,11 +769,27 @@ class CodedSession:
         surviving cluster exactly.
         """
         old_topo = self.cluster.topo
+        old_cluster = self.cluster
         keep = [i for i in range(old_topo.n) if i not in set(dead_edges)]
         self.cluster = self.cluster.shrink(dead_edges, dead_workers)
-        self.plan = self.planner.plan(
-            self.cluster.params, self.code.K, seed=self.seed,
-        )
+        try:
+            plan = self.planner.plan(
+                self.cluster.params, self.code.K, seed=self.seed,
+            )
+            self._check_deployable(plan.code)
+        except ReplanError:
+            self.cluster = old_cluster
+            raise
+        except ValueError as err:
+            # the survivors cannot host ANY compatible plan (e.g. the
+            # shrink made K incompatible with every tolerance level) —
+            # keep the pre-shrink session intact and report what broke
+            self.cluster = old_cluster
+            raise ReplanError(
+                str(err), constraint="plan",
+                topo=old_cluster.shrink(dead_edges, dead_workers).topo,
+            ) from err
+        self.plan = plan
         self.code = self.plan.code
         _extend_streams(self.streams, self.code.K, self.cfg.vocab,
                         self.part_batch, self.seq_len, self.seed)

@@ -1,0 +1,57 @@
+"""Orchestrator — the coded training loop as a supervised service.
+
+Public surface::
+
+    from repro.orchestrator import (
+        DeviceRegistry, HeartbeatMonitor, HeartbeatConfig,
+        InjectionSchedule, FailureInjector, WorkerPool,
+        Orchestrator, OrchestratorConfig, MetricsSink, read_metrics,
+        EventLog,
+    )
+
+Imports here are LAZY on purpose: spawned worker processes import
+``repro.orchestrator.workers`` (numpy-only) through this package, and
+must never pay for — or race — the controller's jax import.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "Event": "repro.orchestrator.events",
+    "EventLog": "repro.orchestrator.events",
+    "DeviceRegistry": "repro.orchestrator.registry",
+    "WorkerRecord": "repro.orchestrator.registry",
+    "Heartbeat": "repro.orchestrator.heartbeat",
+    "HeartbeatConfig": "repro.orchestrator.heartbeat",
+    "HeartbeatMonitor": "repro.orchestrator.heartbeat",
+    "Injection": "repro.orchestrator.injector",
+    "InjectionSchedule": "repro.orchestrator.injector",
+    "FailureInjector": "repro.orchestrator.injector",
+    "RoundEffects": "repro.orchestrator.injector",
+    "ModelRow": "repro.orchestrator.workers",
+    "WorkItem": "repro.orchestrator.workers",
+    "WorkerPool": "repro.orchestrator.workers",
+    "rows_from_params": "repro.orchestrator.workers",
+    "MetricsSink": "repro.orchestrator.metrics",
+    "read_metrics": "repro.orchestrator.metrics",
+    "METRICS_SCHEMA_VERSION": "repro.orchestrator.metrics",
+    "Orchestrator": "repro.orchestrator.controller",
+    "OrchestratorConfig": "repro.orchestrator.controller",
+    "derive_heartbeat": "repro.orchestrator.controller",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+
+        mod = importlib.import_module(_EXPORTS[name])
+        val = getattr(mod, name)
+        globals()[name] = val
+        return val
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

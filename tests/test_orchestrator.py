@@ -1,0 +1,390 @@
+"""Orchestrator units: registry state machine, heartbeat deadlines,
+injector grammar, worker pool, metrics schema, and the structured
+ReplanError surface (ISSUE satellites 1 and 2).
+
+Episode-level behaviour (real pool + real session) lives in
+``test_orchestrator_episode.py``; everything here is fast and mostly
+numpy-only.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.topology import Topology
+from repro.orchestrator import events as ev_mod
+from repro.orchestrator.events import Event, EventLog
+from repro.orchestrator.heartbeat import (Heartbeat, HeartbeatConfig,
+                                          HeartbeatMonitor)
+from repro.orchestrator.injector import (FailureInjector, Injection,
+                                         InjectionSchedule)
+from repro.orchestrator.metrics import (COUNTERS,
+                                        METRICS_SCHEMA_VERSION,
+                                        MetricsSink, read_metrics)
+from repro.orchestrator.registry import (DEAD, HEALTHY, JOINING, SUSPECT,
+                                         DeviceRegistry)
+from repro.orchestrator.workers import (ModelRow, WorkerPool, WorkItem,
+                                        draw_runtime_ms,
+                                        probe_part_vector,
+                                        probe_true_sum,
+                                        resolve_backend)
+
+
+def _registry(m=(2, 2)):
+    reg = DeviceRegistry(Topology(m))
+    reg.register_all()
+    return reg
+
+
+# ----------------------------------------------------------------------
+# registry — the liveness state machine
+# ----------------------------------------------------------------------
+def test_registry_lifecycle_and_events():
+    reg = _registry()
+    assert reg.counts() == {JOINING: 4, HEALTHY: 0, SUSPECT: 0, DEAD: 0}
+    for f in range(4):
+        reg.beat(f, step=0, clock_ms=10.0)
+    assert reg.counts()[HEALTHY] == 4
+    assert [e.kind for e in reg.log.events] == [ev_mod.WORKER_JOINED] * 4
+
+    # miss budget: first miss -> SUSPECT, third -> DEAD
+    reg.miss(0, step=1, clock_ms=500.0, suspect_after=1, dead_after=3)
+    assert reg.state_of(0) == SUSPECT
+    assert reg.record(0).live  # SUSPECT may still submit
+    for k in range(2):
+        reg.miss(0, step=2 + k, clock_ms=600.0 + k, suspect_after=1,
+                 dead_after=3)
+    assert reg.state_of(0) == DEAD
+    assert not reg.record(0).live
+    assert reg.record(0).deaths == 1
+    assert reg.dead_workers() == [0]
+    assert reg.live_workers() == [1, 2, 3]
+
+    # a beat heals: DEAD -> HEALTHY is a rejoin, SUSPECT -> HEALTHY a
+    # recovery — distinct event kinds
+    reg.miss(1, step=4, clock_ms=700.0, suspect_after=1, dead_after=3)
+    reg.beat(1, step=5, clock_ms=800.0)
+    reg.beat(0, step=5, clock_ms=800.0)
+    kinds = [e.kind for e in reg.log.events]
+    assert ev_mod.WORKER_RECOVERED in kinds
+    assert ev_mod.WORKER_REJOINED in kinds
+    assert reg.counts() == {JOINING: 0, HEALTHY: 4, SUSPECT: 0, DEAD: 0}
+    # miss counters reset on the beat
+    assert reg.record(0).consecutive_misses == 0
+
+
+def test_registry_illegal_transition_raises():
+    reg = _registry()
+    # a worker that never beat takes JOINING -> SUSPECT -> DEAD once
+    # its join grace expires (a kill before the first report must be
+    # detectable)
+    reg.miss(0, step=0, clock_ms=100.0, suspect_after=1, dead_after=2)
+    assert reg.state_of(0) == SUSPECT
+    reg.miss(0, step=1, clock_ms=200.0, suspect_after=1, dead_after=2)
+    assert reg.state_of(0) == DEAD
+    # JOINING -> DEAD without passing SUSPECT is illegal
+    with pytest.raises(ValueError, match="illegal liveness transition"):
+        reg._transition(reg.record(1), DEAD, 0, 0.0, ev_mod.WORKER_DEAD)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(0, 0)
+
+
+def test_registry_edge_down_is_derived():
+    reg = _registry((2, 3))
+    for f in range(5):
+        reg.beat(f, step=0, clock_ms=1.0)
+    # kill all of edge 0 (workers 0, 1): edge_down fires exactly once,
+    # on the LAST worker's death
+    for f in (0, 1):
+        for k in range(3):
+            reg.miss(f, step=k, clock_ms=10.0 * k, suspect_after=1,
+                     dead_after=3)
+    assert reg.edge_down(0) and reg.down_edges() == [0]
+    assert len(reg.log.of_kind(ev_mod.EDGE_DOWN)) == 1
+    # one rejoin heals the pod
+    reg.beat(0, step=9, clock_ms=500.0)
+    assert not reg.edge_down(0)
+    assert len(reg.log.of_kind(ev_mod.EDGE_UP)) == 1
+
+
+# ----------------------------------------------------------------------
+# heartbeat — deadlines, backoff, the observation ledger
+# ----------------------------------------------------------------------
+def test_heartbeat_config_validation():
+    with pytest.raises(ValueError, match="below interval"):
+        HeartbeatConfig(interval_ms=100, timeout_ms=50)
+    with pytest.raises(ValueError, match="backoff"):
+        HeartbeatConfig(backoff=0.5)
+    with pytest.raises(ValueError, match="suspect_after"):
+        HeartbeatConfig(suspect_after=3, dead_after=1)
+
+
+def test_monitor_flap_and_backoff():
+    reg = _registry()
+    mon = HeartbeatMonitor(reg, HeartbeatConfig(
+        interval_ms=100, timeout_ms=100, backoff=2.0,
+        suspect_after=1, dead_after=3))
+    for f in range(4):
+        mon.deliver(Heartbeat(f, sent_ms=0.0, runtime_ms=200.0), step=0)
+    # worker 0 goes silent: first tick past the deadline charges a miss
+    for f in range(1, 4):
+        mon.deliver(Heartbeat(f, sent_ms=150.0, runtime_ms=210.0), step=1)
+    assert mon.tick(1, now_ms=150.0) == 1
+    assert reg.state_of(0) == SUSPECT
+    # backoff: the NEXT deadline for worker 0 is 100 * 2^1 = 200 ms
+    # after its last beat — a tick at 260 misses again, one at 190 not
+    assert mon.tick(1, now_ms=190.0) == 0
+    # ...but the flap: the late beat lands before the next deadline
+    mon.deliver(Heartbeat(0, sent_ms=195.0, runtime_ms=400.0), step=2)
+    assert reg.state_of(0) == HEALTHY
+    assert reg.record(0).consecutive_misses == 0
+    assert mon.beats_total == 8
+    assert mon.misses_total == 1
+
+
+def test_monitor_ledger_fills_silent_workers():
+    reg = _registry()
+    mon = HeartbeatMonitor(reg, HeartbeatConfig(miss_fill_factor=2.0))
+    row = mon.record_round({0: 100.0, 1: 120.0, 2: 80.0})  # 3 silent
+    assert row.shape == (4,)
+    # no history: silent worker filled from the round's slowest
+    assert row[3] == pytest.approx(2.0 * 120.0)
+    row2 = mon.record_round({0: 100.0, 1: 120.0, 2: 80.0})
+    # with history: filled from its own EWMA (of the previous fill)
+    assert row2[3] == pytest.approx(2.0 * row[3])
+    obs = mon.observation_matrix()
+    assert obs.shape == (2, 4)
+    assert mon.observation_matrix(window=1).shape == (1, 4)
+
+
+def test_monitor_fit_cluster_prices_observed_slowness():
+    from repro.api.cluster import CodedCluster
+
+    topo = Topology((2, 2))
+    reg = DeviceRegistry(topo)
+    reg.register_all()
+    mon = HeartbeatMonitor(reg)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        base = rng.uniform(90, 110, size=4)
+        base[3] *= 5.0  # worker 3 is consistently 5x slower
+        mon.record_round({f: float(base[f]) for f in range(4)})
+    with pytest.raises(ValueError, match="no observation rows"):
+        HeartbeatMonitor(DeviceRegistry(topo)).fit_cluster(4.0)
+    fitted = mon.fit_cluster(D=4.0)
+    assert isinstance(fitted, CodedCluster)
+    assert fitted.topo == topo
+    assert fitted.params.c[3] > 3.0 * fitted.params.c[0]
+
+
+# ----------------------------------------------------------------------
+# injector — grammar, determinism, windows
+# ----------------------------------------------------------------------
+def test_injection_spec_roundtrip_and_errors():
+    sched = InjectionSchedule.parse(
+        "kill:w0.1@3, slow:e1@5x3:4.0, partition:w1.0@2x2")
+    assert len(sched) == 3
+    assert InjectionSchedule.parse(sched.spec()).spec() == sched.spec()
+    kill = [x for x in sched.injections if x.kind == "kill"][0]
+    assert (kill.edge, kill.worker, kill.step) == (0, 1, 3)
+    slow = [x for x in sched.injections if x.kind == "slow"][0]
+    assert slow.worker is None and slow.duration == 3 and slow.factor == 4.0
+
+    for bad in ("explode:w0.1@3", "kill:w0@3", "kill:x0.1@3",
+                "slow:e1@5x3:0.5", "kill:w0.1"):
+        with pytest.raises(ValueError):
+            InjectionSchedule.parse(bad)
+
+
+def test_injection_windows_and_targets():
+    topo = Topology((2, 3))
+    inj = Injection(kind="slow", step=5, edge=1, worker=None,
+                    duration=3, factor=2.0)
+    assert [inj.active(s) for s in (4, 5, 7, 8)] == [False, True, True,
+                                                     False]
+    assert inj.targets(topo) == (2, 3, 4)
+    kill = Injection(kind="kill", step=3, edge=0, worker=1)
+    assert kill.active(3) and kill.active(100) and not kill.active(2)
+    assert kill.targets(topo) == (1,)
+
+    fi = FailureInjector(InjectionSchedule([inj, kill]), topo)
+    eff = fi.effects(5)
+    assert eff.killed == {1} and eff.slow_factor(3) == 2.0
+    assert eff.slow_factor(0) == 1.0
+    assert [x.kind for x in eff.started] == ["slow"]
+    assert fi.effects(8).slow == {}
+    assert fi.applied == 1  # only the slow START landed in [5, 8]
+
+
+def test_seeded_schedule_deterministic_and_capped():
+    topo = Topology((3, 3))
+    a = InjectionSchedule.seeded(7, topo, steps=20, n_events=6)
+    b = InjectionSchedule.seeded(7, topo, steps=20, n_events=6)
+    assert a.spec() == b.spec()
+    assert a.spec() != InjectionSchedule.seeded(8, topo, 20,
+                                                n_events=6).spec()
+    kills = [x for x in a.injections if x.kind == "kill"]
+    assert len(kills) <= 1
+    assert all(x.worker is not None for x in kills)  # never a whole pod
+
+
+# ----------------------------------------------------------------------
+# workers — determinism and the probe algebra
+# ----------------------------------------------------------------------
+def test_runtime_draw_deterministic():
+    row = ModelRow(c=10, gamma=0.05, tau_w=20, p_w=0.1, tau_e=30,
+                   p_e=0.1)
+    a = draw_runtime_ms(row, flat=2, step=5, seed=3, D=4.0)
+    assert a == draw_runtime_ms(row, flat=2, step=5, seed=3, D=4.0)
+    assert a != draw_runtime_ms(row, flat=2, step=6, seed=3, D=4.0)
+    slow = draw_runtime_ms(row, flat=2, step=5, seed=3, D=4.0,
+                           slow_factor=4.0)
+    assert slow == pytest.approx(a + 3.0 * 10 * 4.0)  # scales c*D only
+
+
+def test_probe_partials_decode_through_lambda():
+    """The pool's probe computation IS eq. (22): master-side λ-decode
+    of the per-worker partials recovers Σ_k s_k exactly."""
+    from repro.core.hgc import HGCCode
+    from repro.core.topology import Tolerance
+
+    topo = Topology((3, 3, 3))
+    code = HGCCode.build(topo, Tolerance(1, 1), K=9)
+    dim, probe_seed = 16, 1234
+    partials = {}
+    for i in range(3):
+        for j in range(3):
+            coeffs = code.worker_coeffs(i, j)
+            p = np.zeros(dim)
+            for k in code.assignment.worker_parts(i, j):
+                p += coeffs[k] * probe_part_vector(probe_seed, k, dim)
+            partials[topo.flat_index(i, j)] = p
+    # drop edge 2 and one worker per surviving edge
+    fast_e, fast_w = (0, 1), [(0, 2), (1, 2), ()]
+    lam = code.collapsed_weights(fast_e, fast_w)
+    decoded = sum(lam[f] * partials[f] for f in partials if lam[f] != 0)
+    np.testing.assert_allclose(
+        decoded, probe_true_sum(probe_seed, code.K, dim),
+        rtol=1e-8, atol=1e-9)
+
+
+def test_worker_pool_thread_backend_kill_and_stale_drop():
+    topo = Topology((1, 2))
+    rows = [ModelRow(c=5, gamma=0.1, tau_w=5, p_w=0.1, tau_e=5,
+                     p_e=0.1)] * 3
+    assert resolve_backend("auto") in ("process", "thread")
+    with pytest.raises(ValueError, match="unknown worker backend"):
+        resolve_backend("fiber")
+    with WorkerPool(topo, rows, seed=0, backend="thread") as pool:
+        work = lambda s: WorkItem(step=s, clock_ms=0.0,
+                                  coeffs=np.ones(3), parts=(0,),
+                                  D=1.0, probe_seed=1)
+        for f in range(3):
+            assert pool.dispatch(f, work(0))
+        res = pool.collect(0, {0, 1, 2})
+        assert sorted(res) == [0, 1, 2]
+        assert pool.kill(1) and not pool.kill(1)
+        assert pool.alive == {0, 2}
+        assert not pool.dispatch(1, work(1))
+        # stale message from an old round is dropped, not returned
+        pool.inject_message(("result", res[0]))
+        for f in (0, 2):
+            pool.dispatch(f, work(1))
+        res1 = pool.collect(1, {0, 2})
+        assert sorted(res1) == [0, 2]
+        assert all(r.step == 1 for r in res1.values())
+    with pytest.raises(ValueError, match="one ModelRow per worker"):
+        WorkerPool(topo, rows[:2])
+
+
+# ----------------------------------------------------------------------
+# metrics — stable schema, JSONL round trip
+# ----------------------------------------------------------------------
+def test_metrics_schema_and_roundtrip(tmp_path):
+    path = os.fspath(tmp_path / "m.jsonl")
+    sink = MetricsSink(path)
+    assert set(sink.counters) == set(COUNTERS)
+    with pytest.raises(KeyError, match="unknown counter"):
+        sink.bump("oops")
+    sink.bump("replans")
+    sink.bump("heartbeat_misses", 3)
+    sink.iteration(
+        step=0, clock_ms=123.4, loss=2.5, iter_ms=120.0,
+        fast_e=(0, 1), fast_w=[(0, 1), (2,), ()], n_results=5,
+        n_counted=3, straggler_hit=True, decode_ok=True,
+        heartbeat_misses=1, states={"HEALTHY": 5},
+        round_events=[Event(kind=ev_mod.REPLAN, step=0, clock_ms=1.0)],
+        wall_us=456.7)
+    sink.summary(steps=1, jit_cache_entries=1, final_loss=2.5,
+                 episode_ms=123.4, detect_to_replan_ms=50.0)
+    sink.close()
+
+    m = read_metrics(path)
+    assert len(m["iteration"]) == 1 and len(m["summary"]) == 1
+    it = m["iteration"][0]
+    assert it["schema"] == METRICS_SCHEMA_VERSION
+    assert it["fast_w"] == [[0, 1], [2], []]
+    assert it["events"][0]["kind"] == "replan"
+    s = m["summary"][0]
+    assert s["counters"]["replans"] == 1
+    assert s["counters"]["heartbeat_misses"] == 3
+    assert s["detect_to_replan_ms"] == 50.0
+
+    # schema drift fails loudly
+    with open(path, "a") as f:
+        f.write(json.dumps({"record": "iteration", "schema": 999}) + "\n")
+    with pytest.raises(ValueError, match="schema"):
+        read_metrics(path)
+
+
+def test_event_log_drain_windows():
+    log = EventLog()
+    log.append(Event(kind=ev_mod.REPLAN, step=0, clock_ms=1.0))
+    assert [e.kind for e in log.drain_new()] == ["replan"]
+    assert log.drain_new() == []
+    log.append(Event(kind=ev_mod.SHRINK, step=1, clock_ms=2.0))
+    assert [e.kind for e in log.drain_new()] == ["shrink"]
+    assert log.first(ev_mod.REPLAN).step == 0
+    assert log.counts() == {"replan": 1, "shrink": 1}
+    with pytest.raises(ValueError, match="unknown event kind"):
+        Event(kind="explosion", step=0, clock_ms=0.0)
+
+
+# ----------------------------------------------------------------------
+# ReplanError — the structured replan failure surface (satellites 1+2)
+# ----------------------------------------------------------------------
+def test_replan_error_exported_and_structured():
+    from repro.api import ReplanError
+
+    err = ReplanError("boom", constraint="uniform_load",
+                      topo=Topology((2, 2)))
+    assert isinstance(err, RuntimeError)
+    assert err.constraint == "uniform_load"
+    assert err.topo.m == (2, 2)
+
+
+def test_uniform_load_rejection_names_offending_edge():
+    """Satellite 2: the dist-mode rejection of a non-uniform grouped
+    plan names the offending edge and its load and points at the
+    planner docs."""
+    from repro.api.session import CodedSession
+
+    class FakeCode:
+        loads = (4, 4, 6)
+
+    class FakeSession:
+        mode = "coded"
+
+    with pytest.raises(ValueError) as ei:
+        CodedSession._require_dist_uniform_load(FakeSession(), FakeCode())
+    msg = str(ei.value)
+    assert "edge 2" in msg and "D=6" in msg
+    assert "D=4" in msg and "(4, 4, 6)" in msg
+    assert "docs/planners.md" in msg
+    # uniform-valued grouped loads pass; mode off never rejects
+    FakeCode.loads = (4, 4, 4)
+    CodedSession._require_dist_uniform_load(FakeSession(), FakeCode())
+    FakeSession.mode = "off"
+    FakeCode.loads = (4, 4, 6)
+    CodedSession._require_dist_uniform_load(FakeSession(), FakeCode())

@@ -1,0 +1,260 @@
+"""End-to-end orchestrated episodes (ISSUE tentpole acceptance).
+
+The load-bearing assertions:
+
+  * a seeded kill + slow-edge episode keeps training through
+    heartbeat-driven detection and an automatic fit-from-observations
+    replan with EXACTLY ONE compiled train executable,
+  * replaying the metrics-recorded completion sets into a fresh
+    session reproduces the loss trajectory bit-for-bit (the metrics
+    are a faithful record, and the coded semantics depend only on the
+    completion set),
+  * the heartbeat edge cases (satellite 3): a flapping worker, a
+    simultaneous edge-pod loss, and a beat arriving during an
+    in-flight replan all leave the compiled-executable count at 1.
+"""
+import numpy as np
+import pytest
+
+from repro.api import CodedCluster, CodedSession, FixedPlanner, ReplanError
+from repro.orchestrator import events as ev_mod
+from repro.orchestrator import (HeartbeatConfig, InjectionSchedule,
+                                MetricsSink, Orchestrator,
+                                OrchestratorConfig)
+from repro.orchestrator.heartbeat import Heartbeat
+
+
+def _smoke_cfg():
+    from repro.configs.registry import get_smoke_config
+
+    return get_smoke_config("llama3-8b")
+
+
+def _session(seed=0, n_edges=3, n_workers=3, steps=40):
+    return CodedSession(
+        CodedCluster.hetero(n_edges, n_workers), _smoke_cfg(),
+        planner=FixedPlanner(s_e=1, s_w=1), total_steps=steps,
+        mode="off", seed=seed, verbose=False)
+
+
+def _orchestrate(session, inject, steps, *, heartbeat=None,
+                 metrics=None, backend="thread", cooldown=2):
+    orch = Orchestrator(
+        session,
+        OrchestratorConfig(steps=steps, backend=backend,
+                           heartbeat=heartbeat,
+                           replan_cooldown=cooldown),
+        schedule=(InjectionSchedule.parse(inject) if inject
+                  else InjectionSchedule()),
+        metrics=metrics or MetricsSink())
+    summary = orch.run_episode()
+    return orch, summary
+
+
+# ----------------------------------------------------------------------
+# the acceptance episode
+# ----------------------------------------------------------------------
+def test_kill_and_slow_episode_zero_recompile(tmp_path):
+    """Seeded worker kill + slow edge: heartbeats detect the death,
+    the controller refits the cluster from observations and replans,
+    training continues, and the train step never recompiles."""
+    path = str(tmp_path / "orch.jsonl")
+    sess = _session()
+    orch, summary = _orchestrate(
+        sess, "kill:w0.1@3,slow:e1@5x2:4.0", steps=12,
+        metrics=MetricsSink(path))
+
+    assert summary["jit_cache_entries"] == 1
+    assert summary["counters"]["replans"] >= 1
+    assert summary["counters"]["injections_applied"] == 2
+    assert summary["counters"]["decode_fallbacks"] == 0
+    assert summary["detect_to_replan_ms"] is not None \
+        and summary["detect_to_replan_ms"] > 0
+    # the killed worker was detected via heartbeats alone
+    assert orch.registry.dead_workers() == [1]
+    kinds = orch.log.counts()
+    assert kinds.get("worker_suspect", 0) >= 1
+    assert kinds.get("worker_dead", 0) == 1
+    assert kinds.get("replan", 0) >= 1
+    # training progressed: one loss per non-fallback round
+    assert len(sess.losses) == 12
+    assert np.isfinite(sess.losses).all()
+
+    from repro.orchestrator import read_metrics
+
+    m = read_metrics(path)
+    assert len(m["iteration"]) == 12 and len(m["summary"]) == 1
+    assert all(r["decode_ok"] for r in m["iteration"])
+    # the dead worker is absent from every post-detection completion set
+    for r in m["iteration"]:
+        if r["step"] >= 4 and 0 in r["fast_e"]:
+            assert 1 not in r["fast_w"][0]
+
+
+def test_replay_parity_from_metrics(tmp_path):
+    """Replaying the recorded completion sets into a fresh session
+    reproduces the losses bit-for-bit (metrics faithfulness)."""
+    path = str(tmp_path / "orch.jsonl")
+    sess = _session(seed=11)
+    _orchestrate(sess, "slow:e1@2x2:3.0,partition:w2.0@5x1",
+                 steps=8, metrics=MetricsSink(path))
+
+    from repro.orchestrator import read_metrics
+
+    records = read_metrics(path)["iteration"]
+    fresh = _session(seed=11)
+    for r in records:
+        assert r["n_counted"] > 0
+        m = fresh.external_step(tuple(r["fast_e"]),
+                                [tuple(w) for w in r["fast_w"]])
+        assert float(m["loss"]) == r["loss"]
+    assert fresh.losses == sess.losses
+    assert fresh.jit_cache_entries() == 1
+
+
+# ----------------------------------------------------------------------
+# satellite 3 — heartbeat edge cases, all at one compiled executable
+# ----------------------------------------------------------------------
+def test_flapping_worker_recovers_inside_timeout():
+    """Tight deadlines on the hetero cluster: slow/partitioned workers
+    miss a beat, go SUSPECT, and the held-back beat recovers them
+    inside the death budget (flaps, not deaths) — cache stays at 1."""
+    sess = _session(seed=2)
+    hb = HeartbeatConfig(interval_ms=200.0, timeout_ms=600.0,
+                         backoff=1.0, suspect_after=1, dead_after=4)
+    orch, summary = _orchestrate(sess, "partition:w2.0@2x1", steps=12,
+                                 heartbeat=hb)
+    kinds = orch.log.counts()
+    assert kinds.get("worker_recovered", 0) >= 1
+    assert summary["counters"]["flaps"] >= 1
+    assert kinds.get("worker_dead", 0) == 0
+    assert summary["jit_cache_entries"] == 1
+    assert len(sess.losses) == 12
+
+
+def test_simultaneous_edge_pod_loss():
+    """Killing a whole pod at once: the registry derives ONE edge_down,
+    the code's s_e=1 absorbs the loss (no fallback), and the fit-replan
+    fires — still one executable."""
+    sess = _session(seed=3)
+    orch, summary = _orchestrate(sess, "kill:e2@2", steps=14)
+    kinds = orch.log.counts()
+    assert kinds.get("edge_down", 0) == 1
+    assert orch.registry.down_edges() == [2]
+    assert summary["counters"]["replans"] >= 1
+    assert summary["counters"]["decode_fallbacks"] == 0
+    assert summary["jit_cache_entries"] == 1
+    assert len(sess.losses) == 14
+    # edge 2 never decodes after death detection
+    dead_at = orch.log.first(ev_mod.EDGE_DOWN).step
+    for r in orch.metrics.records:
+        if r.get("record") == "iteration" and r["step"] > dead_at:
+            assert 2 not in r["fast_e"]
+
+
+def test_heartbeat_during_inflight_replan(monkeypatch):
+    """A beat delivered in the middle of session.replan lands in the
+    monitor's ledger without corrupting the episode — same compiled
+    executable, consistent registry."""
+    sess = _session(seed=4)
+    orch = Orchestrator(
+        sess, OrchestratorConfig(steps=10, backend="thread"),
+        schedule=InjectionSchedule.parse("kill:w0.1@2"))
+
+    real_replan = sess.replan
+    hits = []
+
+    def replan_with_racing_beat(planner=None, cluster=None):
+        # the race: a live worker's beat arrives while the replan is
+        # still in flight
+        orch.monitor.deliver(
+            Heartbeat(flat=3, sent_ms=orch.clock_ms, runtime_ms=150.0),
+            step=len(hits))
+        hits.append(1)
+        return real_replan(planner=planner, cluster=cluster)
+
+    monkeypatch.setattr(sess, "replan", replan_with_racing_beat)
+    summary = orch.run_episode()
+    assert hits, "episode never replanned — race not exercised"
+    assert summary["jit_cache_entries"] == 1
+    assert orch.registry.state_of(3) == "HEALTHY"
+    assert summary["counters"]["replans"] >= 1
+
+
+# ----------------------------------------------------------------------
+# failure handling — ReplanError is logged, never fatal
+# ----------------------------------------------------------------------
+def test_replan_error_logged_not_fatal(monkeypatch):
+    sess = _session(seed=5)
+    orch = Orchestrator(
+        sess, OrchestratorConfig(steps=10, backend="thread"),
+        schedule=InjectionSchedule.parse("kill:w0.1@2"))
+
+    def failing_replan(planner=None, cluster=None):
+        raise ReplanError("grouped loads under dist",
+                          constraint="uniform_load",
+                          topo=sess.cluster.topo)
+
+    monkeypatch.setattr(sess, "replan", failing_replan)
+    summary = orch.run_episode()
+    assert summary["counters"]["replan_errors"] >= 1
+    assert summary["counters"]["replans"] == 0
+    failed = orch.log.of_kind(ev_mod.REPLAN_FAILED)
+    assert failed and failed[0].detail["constraint"] == "uniform_load"
+    assert failed[0].detail["m"] == [3, 3, 3]
+    assert summary["jit_cache_entries"] == 1
+    assert len(sess.losses) == 10  # the episode kept training
+
+
+def test_replan_cluster_topology_mismatch_raises():
+    sess = _session(seed=6, n_edges=2, n_workers=2, steps=10)
+    other = CodedCluster.hetero(3, 2)
+    with pytest.raises(ReplanError) as ei:
+        sess.replan(cluster=other)
+    assert ei.value.constraint == "topology"
+    assert ei.value.topo == sess.cluster.topo
+
+
+def test_external_step_validates_completion_set():
+    sess = _session(seed=7, n_edges=2, n_workers=2, steps=10)
+    with pytest.raises(ValueError, match="needs >= 1"):
+        sess.external_step((), [(), ()])
+    with pytest.raises(ValueError, match="edge 0"):
+        sess.external_step((0,), [(), (0,)])
+
+
+# ----------------------------------------------------------------------
+# dist mode — the orchestrator over the in-mesh coded decode
+# ----------------------------------------------------------------------
+def test_orchestrated_dist_coded_zero_recompile(tmp_path):
+    """The full service over the (pod, data) mesh: worker pool, kill
+    injection, heartbeat detection, replan — with λ decoded INSIDE the
+    compiled shard_map step, still exactly one executable.  Runs in a
+    subprocess so the forced 8-device flag never leaks."""
+    import os
+    import subprocess
+    import sys
+
+    path = str(tmp_path / "orch_dist.jsonl")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.orchestrate",
+         "--smoke", "--dist", "coded", "--cluster", "hetero",
+         "--n-edges", "2", "--n-workers", "4", "--steps", "8",
+         "--seq-len", "16", "--scheme", "hgc", "--s-e", "1",
+         "--s-w", "1", "--backend", "thread",
+         "--inject", "kill:w0.1@2", "--metrics-out", path,
+         "--expect-zero-recompile", "--min-replans", "1"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-2000:]}\nstderr:\n{r.stderr[-2000:]}"
+
+    from repro.orchestrator import read_metrics
+
+    m = read_metrics(path)
+    assert m["summary"][0]["jit_cache_entries"] == 1
+    assert m["summary"][0]["counters"]["replans"] >= 1
+    assert all(r["decode_ok"] for r in m["iteration"])

@@ -171,12 +171,10 @@ _SEQ_ANCHOR_SCRIPT = textwrap.dedent(
         new_p, _, m = jax.jit(lambda *a: step(*a))(
             params_s, opt_s, batch_s, jnp.asarray(0))
         loss_seq = float(m["loss"])
-    # NOTE deliberately compared against the UNSHARDED reference: the
-    # legacy feature-anchored layout (seq=False) executed with
-    # FSDP-sharded params diverges numerically on this jax/XLA:CPU
-    # (fsdp=False is exact) — a pre-existing, previously unexecuted
-    # combination (its only consumer, the dryrun, is AOT-only).  The
-    # seq layout is exact against ground truth even with FSDP on.
+    # deliberately compared against the UNSHARDED reference; the
+    # feature-anchored (seq=False) x FSDP combination has its own
+    # xfail case below (test_pjit_feature_anchor_fsdp_divergence).
+    # The seq layout is exact against ground truth even with FSDP on.
     assert abs(loss_seq - loss_ref) < 2e-5, (loss_seq, loss_ref)
     print("SEQ_ANCHOR_OK", f"{loss_seq:.5f}")
     """
@@ -199,3 +197,97 @@ def test_pjit_seq_shard_anchors():
     assert r.returncode == 0, \
         f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
     assert "SEQ_ANCHOR_OK" in r.stdout
+
+
+_FEATURE_FSDP_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_smoke_config
+    from repro.dist import sharding as sh
+    from repro.dist.mesh import make_test_mesh
+    from repro.launch import steps as steps_lib
+    from repro.models import transformer as tf
+    from repro.optim import make_optimizer
+
+    mesh = make_test_mesh(2, 2, 2)
+    cfg = dataclasses.replace(get_smoke_config("llama3-8b"),
+                              dtype="float32")
+    tcfg = TrainConfig(optimizer="sgd", lr=0.05, total_steps=10,
+                       warmup_steps=1, grad_clip=0.0)
+    opt = make_optimizer("sgd")
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    B, S = 8, 16
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32),
+        "targets": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32),
+        "weights": jnp.ones((B, S), jnp.float32),
+        "denom": jnp.float32(B * S),
+    }
+    step = steps_lib.make_train_step(cfg, tcfg, optimizer=opt)
+    _, _, m_ref = jax.jit(lambda *a: step(*a))(
+        params, opt_state, batch, jnp.asarray(0))
+    loss_ref = float(m_ref["loss"])
+    # the suspect combination: legacy feature-anchored activations
+    # (seq=False, feature dim on "model") with FSDP-sharded params
+    with mesh, sh.activation_sharding(mesh):
+        pspecs = sh.fit_pspecs(
+            sh.params_pspecs(params, cfg, mesh, fsdp=True), params, mesh)
+        params_s = jax.device_put(params, sh.to_shardings(pspecs, mesh))
+        opt_s = jax.device_put(
+            opt_state,
+            sh.to_shardings(sh.fit_pspecs(
+                sh.opt_state_pspecs(opt_state, pspecs),
+                opt_state, mesh), mesh))
+        b_sh = {k: NamedSharding(
+                    mesh, P(("pod", "data"), *([None] * (v.ndim - 1)))
+                    if v.ndim else P())
+                for k, v in batch.items()}
+        batch_s = {k: jax.device_put(v, b_sh[k])
+                   for k, v in batch.items()}
+        _, _, m = jax.jit(lambda *a: step(*a))(
+            params_s, opt_s, batch_s, jnp.asarray(0))
+        loss_feat = float(m["loss"])
+    assert abs(loss_feat - loss_ref) < 2e-5, (loss_feat, loss_ref)
+    print("FEATURE_FSDP_OK", f"{loss_feat:.5f}")
+    """
+)
+
+
+@pytest.mark.xfail(
+    strict=False,
+    reason="feature-anchored (seq=False) activations x FSDP-sharded "
+    "params diverge numerically on jax 0.4.37 / XLA:CPU (fsdp=False "
+    "and the seq=True layout are both exact against the unsharded "
+    "reference); the only production consumer of this combination, "
+    "the dryrun, is AOT-only and never executes it",
+)
+def test_pjit_feature_anchor_fsdp_divergence():
+    """Executable record of the known divergence: the legacy feature
+    layout under FSDP should match the unsharded loss, and on current
+    jax/XLA:CPU it does not.  strict=False so a toolchain that fixes
+    the miscompile turns this green without blocking CI."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, "-c", _FEATURE_FSDP_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
+    assert "FEATURE_FSDP_OK" in r.stdout
