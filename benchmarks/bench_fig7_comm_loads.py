@@ -4,6 +4,11 @@ Proportional to the number of computation results the master receives
 per iteration (paper §V-B).  Derived: messages and the reduction factor
 vs Standard GC (the hierarchical pre-aggregation win the paper opens
 with: ~10× for 100 workers / 10 edges).
+
+Also emits the cross-pod BYTES per message under each wire codec
+(f32 baseline vs int8 / int4 / fp8 blockwise quantization): the codec
+reduction multiplies the hierarchical message reduction, so e.g. HGC +
+int4 cuts master traffic by messages-ratio × ~8× in bytes.
 """
 from __future__ import annotations
 
@@ -12,6 +17,11 @@ import time
 from benchmarks.common import row
 from repro.core.runtime_model import paper_cluster
 from repro.core.schemes import SCHEME_NAMES, make_scheme
+from repro.dist.compression import COMPRESSION_MODES, wire_bytes_per_value
+
+# per-message payload values and quantization block of the codec hop
+# (matches the kernel benchmark slab: F = 64k values, block = 128)
+_F, _BLOCK = 1 << 16, 128
 
 
 def main() -> None:
@@ -31,6 +41,21 @@ def main() -> None:
             f"fig7/{name}",
             us,
             f"master_msgs={msgs};vs_standard_gc={std / msgs:.1f}x",
+        )
+    # codec byte reduction on the edge->master hop (per message of _F
+    # values): f32 ships 4 B/value; each codec's wire cost includes its
+    # per-block f32 scales, so the ratio is the honest end-to-end win
+    hgc_msgs = loads["hgc"]
+    for mode in COMPRESSION_MODES:
+        bpv = wire_bytes_per_value(mode, _BLOCK)
+        msg_bytes = bpv * _F
+        row(
+            f"fig7/bytes/{mode}",
+            us,
+            f"bytes_per_msg={msg_bytes:.0f};vs_f32={4.0 / bpv:.2f}x;"
+            f"hgc_master_bytes={hgc_msgs * msg_bytes:.0f};"
+            f"vs_standard_gc_f32="
+            f"{std * 4.0 * _F / (hgc_msgs * msg_bytes):.1f}x",
         )
 
 

@@ -20,7 +20,16 @@ Two modes, both emitted on every run:
    slow).  When ``BENCH_ROOFLINE_OUT`` is set (``benchmarks.run
    --quick``) the record is written there as JSON.
 
-2. **Legacy artifact table** (when present): one row per
+2. **Per-kernel floors** (always): every member of the Pallas kernel
+   family (coded_combine, the q8/q4/f8 fused-dequant variants, fused
+   decode attention) gets its analytic arithmetic intensity from
+   :mod:`benchmarks.kernel_models` asserted against a per-kernel floor
+   (:data:`~benchmarks.kernel_models.INTENSITY_FLOORS`).  A payload
+   regression — int4 shipped un-packed, scales spilled at f32 per
+   value, decode scores re-materialized to HBM — halves a kernel's
+   intensity and fails its floor in CI.
+
+3. **Legacy artifact table** (when present): one row per
    results/dryrun/*.json produced by ``repro.launch.dryrun --all``.
 """
 from __future__ import annotations
@@ -148,8 +157,32 @@ def _smoke_probe() -> None:
             json.dump(rec, f, indent=1)
 
 
+def _kernel_floors() -> None:
+    """Per-kernel roofline rows + arithmetic-intensity floor gates."""
+    from benchmarks.kernel_models import INTENSITY_FLOORS, family_records
+
+    for name, rec in family_records().items():
+        floor = INTENSITY_FLOORS[name]
+        if rec["arithmetic_intensity"] < floor:
+            raise RuntimeError(
+                f"{name} arithmetic intensity regressed: "
+                f"{rec['arithmetic_intensity']:.2f} flops/byte < floor "
+                f"{floor} (flops {rec['flops']:.3e}, bytes "
+                f"{rec['bytes_moved']:.3e}) — the kernel's payload "
+                f"layout or data movement grew relative to its compute"
+            )
+        row(
+            f"roofline/kernel/{name}",
+            rec["modeled_us"],
+            f"intensity={rec['arithmetic_intensity']:.2f}flops/B;"
+            f"floor={floor};bound={rec['bound']};"
+            f"bytes_moved={rec['bytes_moved']:.0f}",
+        )
+
+
 def main() -> None:
     _smoke_probe()
+    _kernel_floors()
     files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
     if not files:
         row("roofline/artifacts", 0.0,

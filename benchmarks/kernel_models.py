@@ -1,0 +1,110 @@
+"""Analytic flops / bytes-moved models for the Pallas kernel family.
+
+One record per family member at its representative benchmark shape.
+Everything here is closed-form in the shapes — no timing, no HLO — so
+``bench_kernels`` can emit a DETERMINISTIC ``us_per_call`` (the modeled
+TPU roofline time ``max(flops/PEAK_FLOPS, bytes/HBM_BW)``) that
+``check_regression`` gates meaningfully: the number moves only when a
+kernel's payload layout or flop count changes (e.g. int4 un-packed back
+to bytes), never because a CI runner was slow.  ``bench_roofline``
+reuses the same records for the per-kernel arithmetic-intensity floors.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.api.aot import HBM_BW, PEAK_FLOPS
+
+#: payload bytes per gradient value on the compressed hop
+PAYLOAD_BYTES = {"int8": 1.0, "int4": 0.5, "fp8": 1.0}
+
+
+def combine_model(R: int, K: int, F: int) -> Dict:
+    """f32 ``coded_combine``: out (R,F) = C (R,K) @ G (K,F)."""
+    flops = 2.0 * R * K * F
+    bytes_ = 4.0 * (R * K + K * F + R * F)
+    return _finish("coded_combine", flops, bytes_,
+                   dict(R=R, K=K, F=F))
+
+
+def combine_compressed_model(mode: str, R: int, K: int, F: int,
+                             block: int) -> Dict:
+    """Fused dequant combine: quantized G payload + f32 scales in,
+    f32 out.  The dequant multiply (+ int4 unpack ops) ride the flop
+    term; the byte term is what actually crosses HBM/the wire."""
+    dequant = {"int8": 1.0, "int4": 4.0, "fp8": 1.0}[mode]  # ops/value
+    flops = 2.0 * R * K * F + dequant * K * F
+    bytes_ = (4.0 * R * K                      # coefficients
+              + PAYLOAD_BYTES[mode] * K * F    # quantized payload
+              + 4.0 * K * (F // block)         # per-block scales
+              + 4.0 * R * F)                   # f32 out
+    return _finish(f"coded_combine_{_SUFFIX[mode]}", flops, bytes_,
+                   dict(R=R, K=K, F=F, block=block, mode=mode))
+
+
+def decode_attention_model(B: int, C: int, Kv: int, G: int,
+                           Dh: int) -> Dict:
+    """Fused ring-buffer decode attention, one token: q·Kᵀ and p·V over
+    the whole cache.  HBM sees q, the two caches, and out ONCE — the
+    (H, C) score tensor never leaves VMEM (the point of the kernel)."""
+    H = Kv * G
+    flops = 4.0 * B * H * C * Dh  # 2·H·C·Dh for qk + same for pv
+    bytes_ = (4.0 * B * H * Dh * 2        # q + out
+              + 4.0 * B * C * Kv * Dh * 2)  # k + v cache, read once
+    return _finish("decode_attention", flops, bytes_,
+                   dict(B=B, C=C, Kv=Kv, G=G, Dh=Dh))
+
+
+_SUFFIX = {"int8": "q", "int4": "q4", "fp8": "f8"}
+
+
+def _finish(name: str, flops: float, bytes_: float, shape: Dict) -> Dict:
+    intensity = flops / bytes_
+    modeled_s = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+    return {
+        "name": name,
+        "shape": shape,
+        "flops": flops,
+        "bytes_moved": bytes_,
+        "arithmetic_intensity": intensity,
+        "modeled_us": modeled_s * 1e6,
+        "bound": ("memory" if bytes_ / HBM_BW > flops / PEAK_FLOPS
+                  else "compute"),
+    }
+
+
+# representative shapes: the fig-7-scale combine (R=8 rows, K=40 parts,
+# 64k-value gradient slab, block 128) and a gemma3-27b-proportioned
+# decode step (C=1024-slot ring, 8 kv heads x 4-way GQA, Dh=128)
+BENCH_R, BENCH_K, BENCH_F, BENCH_BLOCK = 8, 40, 1 << 16, 128
+DECODE_B, DECODE_C, DECODE_KV, DECODE_G, DECODE_DH = 8, 1024, 8, 4, 128
+
+
+def family_records() -> Dict[str, Dict]:
+    """The whole kernel family at its benchmark shapes, keyed by name."""
+    recs = [
+        combine_model(BENCH_R, BENCH_K, BENCH_F),
+        combine_compressed_model("int8", BENCH_R, BENCH_K, BENCH_F,
+                                 BENCH_BLOCK),
+        combine_compressed_model("int4", BENCH_R, BENCH_K, BENCH_F,
+                                 BENCH_BLOCK),
+        combine_compressed_model("fp8", BENCH_R, BENCH_K, BENCH_F,
+                                 BENCH_BLOCK),
+        decode_attention_model(DECODE_B, DECODE_C, DECODE_KV, DECODE_G,
+                               DECODE_DH),
+    ]
+    return {r["name"]: r for r in recs}
+
+
+# arithmetic-intensity floors (flops per byte moved) at the benchmark
+# shapes, set at ~half the modeled value so CI catches a payload-layout
+# regression (unpacked int4, f32 scale spill, re-materialized scores)
+# without tripping on a small model refinement.  Modeled values:
+# combine 3.33, q 9.28, q4 15.02, f8 9.28, decode_attention 1.99.
+INTENSITY_FLOORS = {
+    "coded_combine": 1.6,
+    "coded_combine_q": 4.6,
+    "coded_combine_q4": 7.5,
+    "coded_combine_f8": 4.6,
+    "decode_attention": 1.0,
+}

@@ -43,6 +43,7 @@ QUICK_MODULES = [
     "benchmarks.bench_trainstep_sp",
     "benchmarks.bench_trainstep_pp",
     "benchmarks.bench_orchestrator",
+    "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
 ]
 
@@ -71,6 +72,9 @@ def main(argv=None) -> None:
         )
         os.environ["BENCH_ROOFLINE_OUT"] = os.path.join(
             os.path.dirname(args.out) or ".", "BENCH_roofline.json"
+        )
+        os.environ["BENCH_KERNELS_OUT"] = os.path.join(
+            os.path.dirname(args.out) or ".", "BENCH_kernels.json"
         )
         modules = QUICK_MODULES
     print("name,us_per_call,derived")

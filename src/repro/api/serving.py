@@ -63,11 +63,25 @@ def make_prefill_fn(
     return bulk if use_bulk else exact_loop
 
 
-def make_decode_fn(cfg: ModelConfig) -> Callable:
-    """→ ``decode(params, token, cache) → (logits, cache)``."""
+def make_decode_fn(
+    cfg: ModelConfig, use_pallas: Optional[bool] = None
+) -> Callable:
+    """→ ``decode(params, token, cache) → (logits, cache)``.
+
+    ``use_pallas`` gates the fused ring-buffer decode-attention kernel
+    in the serve hot loop (None ⇒ auto: compiled kernel on TPU, XLA
+    attention elsewhere; True forces the kernel — interpret mode
+    off-TPU, the parity path CI exercises).  The switch is resolved
+    ONCE here so every jitted decode dispatch takes the same path.
+    """
+    if use_pallas is None:
+        from repro.kernels.ops import on_tpu
+
+        use_pallas = on_tpu()
 
     def decode(params, token, cache):
-        return tf.decode_step(params, cfg, token, cache)
+        return tf.decode_step(params, cfg, token, cache,
+                              use_pallas=use_pallas)
 
     return decode
 

@@ -7,7 +7,7 @@ prefill / decode steps, the per-part data streams, the straggler
 simulation + detector feedback, JNCSS replanning, permanent-failure
 shrinking, and the checkpoint round trip (bit-for-bit kill/resume).
 
-The three aggregation policies of the train CLI map to ``mode``:
+The aggregation policies of the train CLI map to ``mode``:
 
   * ``"off"``        — single-host reference: λ rides the per-example
     batch weights and the jit gradient reduction decodes implicitly,
@@ -15,7 +15,11 @@ The three aggregation policies of the train CLI map to ``mode``:
     shard_map decode with λ as a runtime operand (zero recompiles
     across straggler drops and replans),
   * ``"coded_int8"`` — same, with the blockwise-int8 + error-feedback
-    edge→master hop (per-pod EF residuals ride the training state).
+    edge→master hop (per-pod EF residuals ride the training state),
+  * ``"coded_q"``    — same hop with the codec ``grad_compression``
+    selects (int8 default, int4 packed nibbles, or fp8-e4m3) — all
+    three share the f32 EF-residual contract, so checkpoints,
+    kill/resume, and replans behave identically across codecs.
 
 Quickstart::
 
@@ -165,6 +169,7 @@ class CodedSession:
         warmup_steps: Optional[int] = None,
         grad_clip: float = 1.0,
         grad_block: int = 64,
+        grad_compression: str = "",
         seed: int = 0,
         scheme: Optional[str] = None,
         checkpoint_dir: str = "",
@@ -174,8 +179,35 @@ class CodedSession:
         log_every: int = 10,
         verbose: bool = True,
     ):
-        if mode not in ("off", "coded", "coded_int8"):
+        if mode not in ("off", "coded", "coded_int8", "coded_q"):
             raise ValueError(f"unknown session mode {mode!r}")
+        # codec for the compressed cross-pod hop: "coded_int8" pins
+        # int8 (back-compat spelling); "coded_q" reads grad_compression
+        # (default int8, or int4 / fp8 — see dist/compression.py)
+        if mode == "coded_int8":
+            if grad_compression and grad_compression != "int8":
+                raise ValueError(
+                    "mode='coded_int8' pins grad_compression='int8'; "
+                    "use mode='coded_q' to pick a codec"
+                )
+            self.grad_compression = "int8"
+        elif mode == "coded_q":
+            self.grad_compression = grad_compression or "int8"
+            from repro.dist import compression as _comp
+
+            if self.grad_compression not in _comp.COMPRESSION_MODES:
+                raise ValueError(
+                    f"unknown grad_compression "
+                    f"{self.grad_compression!r} (choose from "
+                    f"{_comp.COMPRESSION_MODES})"
+                )
+        else:
+            if grad_compression:
+                raise ValueError(
+                    f"grad_compression={grad_compression!r} needs "
+                    "mode='coded_q' (or 'coded_int8')"
+                )
+            self.grad_compression = "none"
         self.cluster = cluster
         self.cfg = cfg
         self.mode = mode
@@ -252,7 +284,7 @@ class CodedSession:
             scheme=self.scheme, s_e=self.code.tol.s_e,
             s_w=self.code.tol.s_w, K=self.code.K,
             dist_mode=mode,
-            grad_compression="int8" if mode == "coded_int8" else "none",
+            grad_compression=self.grad_compression,
             grad_compression_block=grad_block,
             seq_shard_activations=self.seq_shard,
             pp_stages=self.pp,
@@ -448,7 +480,7 @@ class CodedSession:
         }
         self._lam_sh = NamedSharding(mesh, P("pod", "data"))
         res_sh: Dict = {}
-        if self.tcfg.grad_compression == "int8":
+        if self.tcfg.grad_compression != "none":
             if carry_residual:
                 self.residual = jax.tree.map(jnp.asarray, carry_residual)
             elif "ef_residual" in self._restored_extra:
@@ -825,7 +857,7 @@ class CodedSession:
             "code": _code_desc(self.code),
             "cluster": cluster_state,
         }
-        if self.tcfg.grad_compression == "int8" and self._mesh is not None:
+        if self.tcfg.grad_compression != "none" and self._mesh is not None:
             extra["ef_residual"] = self.residual
         return self.store.save(
             self._step if step is None else step,

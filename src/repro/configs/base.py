@@ -204,9 +204,13 @@ class TrainConfig:
     #   off        — single-host reference loop, λ rides the batch weights
     #   coded      — shard_map two-stage coded psum on a (pod, data[, model]) mesh
     #   coded_int8 — same, with the int8 + error-feedback cross-pod hop
+    #   coded_q    — same, codec chosen by grad_compression (int8|int4|fp8)
     dist_mode: str = "off"
-    grad_compression: str = "none"  # none | int8 (edge→master hop)
-    grad_compression_block: int = 64  # int8 block size on that hop
+    # edge→master hop codec: none | int8 | int4 (packed nibbles) | fp8
+    # (e4m3); all three share the EF-residual contract, so checkpoints
+    # restore across codecs (dist/compression.py)
+    grad_compression: str = "none"
+    grad_compression_block: int = 64  # quantization block on that hop
     fsdp: bool = True  # shard params over the data axis as well
     # sequence parallelism (Megatron SP) inside the dist-TP shard_map:
     # row-parallel out-projections reduce-scatter over seq, the

@@ -30,16 +30,11 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
     )
 
 
-def on_tpu() -> bool:
-    """Whether the default jax backend is a TPU.
-
-    The one place the ``use_pallas`` defaults come from: the Pallas
-    ``coded_combine`` kernel runs compiled on TPU and interpret-mode
-    everywhere else, so every caller gates on this same predicate.
-    """
-    import jax
-
-    return jax.default_backend() == "tpu"
+# Canonical backend probe lives with the kernels it gates
+# (kernels sit below dist in the layer order, so the import is legal
+# in exactly this direction); re-exported here so dist/launch callers
+# keep their existing ``from repro.dist._compat import on_tpu``.
+from repro.kernels.ops import on_tpu
 
 
 __all__ = ["on_tpu", "shard_map"]

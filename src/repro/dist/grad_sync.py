@@ -98,19 +98,23 @@ def compressed_coded_psum(
     n_pods: int,
     axes: Tuple[str, str] = (EDGE_AXIS, WORKER_AXIS),
     block: int = 64,
+    mode: str = "int8",
     use_pallas=None,
 ) -> Tuple[PyTree, PyTree]:
-    """λ-weighted decode with an int8 + error-feedback cross-pod hop.
+    """λ-weighted decode with a quantized + error-feedback cross-pod hop.
 
     In-shard_map counterpart of :func:`coded_weighted_psum` for the
     bandwidth-limited regime: stage 1 (worker→edge, eq. 25) stays an
     exact psum; the per-edge partial plus this pod's EF residual is then
-    blockwise-int8 quantized, all-gathered across the pod axis and
-    combined through the fused dequant kernel (eq. 27 over int8
-    payloads).  ``residual`` leaves carry a leading per-pod axis (local
-    block size 1 inside shard_map); the returned residual is what the
-    int8 payload failed to carry, so transmitted values telescope
-    (EF-SGD — time-averaged gradient stays unbiased).
+    blockwise quantized (``mode`` ∈ int8 | int4 | fp8, see
+    :mod:`repro.dist.compression`), all-gathered across the pod axis
+    and combined through the matching fused dequant kernel (eq. 27 over
+    quantized payloads — 4× fewer cross-pod bytes for int8/fp8, 8× for
+    packed int4).  ``residual`` leaves carry a leading per-pod axis
+    (local block size 1 inside shard_map) and stay f32 for every codec,
+    so checkpoints restore under any ``mode``; the returned residual is
+    what the low-precision payload failed to carry, so transmitted
+    values telescope (EF-SGD — time-averaged gradient stays unbiased).
 
     Returns ``(decoded_tree, new_residual)``.
     """
@@ -123,15 +127,16 @@ def compressed_coded_psum(
         y = x * lam.astype(jnp.float32)
         y = lax.psum(y, worker_axis)  # exact edge decode (eq. 25)
         target = y + r.reshape(y.shape).astype(jnp.float32)
-        q, scales, meta = compression.quantize_int8(target, block=block)
+        q, scales, meta = compression.quantize(target, block=block,
+                                               mode=mode)
         # local dequant: the EF update needs what the wire will carry
-        sent = compression.dequantize_int8(q, scales, meta)
+        sent = compression.dequantize(q, scales, meta)
         new_r = (target - sent).reshape(r.shape).astype(r.dtype)
-        qs = lax.all_gather(q, pod_axis)       # (n_pods, F_padded)
+        qs = lax.all_gather(q, pod_axis)       # (n_pods, payload)
         ss = lax.all_gather(scales, pod_axis)  # (n_pods, nb)
         ones = jnp.ones((1, n_pods), jnp.float32)
-        out = kernel_ops.combine_q(
-            ones, qs, ss, block=block, use_pallas=use_pallas
+        out = kernel_ops.combine_compressed(
+            mode, ones, qs, ss, block=block, use_pallas=use_pallas
         )[0]
         return out[: y.size].reshape(y.shape).astype(x.dtype), new_r
 
@@ -188,15 +193,18 @@ def make_compressed_cross_pod_sum(
     mesh,
     axes: Tuple[str, str] = (EDGE_AXIS, WORKER_AXIS),
     block: int = 64,
+    mode: str = "int8",
 ):
-    """Coded all-reduce with an int8 edge→master hop.
+    """Coded all-reduce with a quantized edge→master hop.
 
     Stage 1 (worker→edge, in-pod links) stays exact; the per-edge
-    partial is then blockwise-int8 quantized before crossing the pod
+    partial is then blockwise quantized before crossing the pod
     boundary — the bytes that actually traverse the scarce edge↔master
-    link shrink 4×.  All pods' int8 payloads + scales are gathered and
-    combined with unit coefficients through the fused dequant-matmul
-    Pallas kernel (``coded_combine_q``), mirroring the TPU hot path.
+    link shrink 4× (int8/fp8) or 8× (packed int4).  All pods' payloads
+    + scales are gathered and combined with unit coefficients through
+    the matching fused dequant-matmul Pallas kernel
+    (``coded_combine_q`` / ``_q4`` / ``_f8``), mirroring the TPU hot
+    path.
     """
     pod_axis, worker_axis = axes
     n_pods = mesh.shape[pod_axis]
@@ -208,13 +216,14 @@ def make_compressed_cross_pod_sum(
         def leaf(x):
             y = x * lam.astype(jnp.float32)
             y = lax.psum(y, worker_axis)  # exact edge decode (eq. 25)
-            q, scales, _ = compression.quantize_int8(y, block=block)
-            # gather every edge's int8 partial + scales at the master
-            qs = lax.all_gather(q, pod_axis)       # (n, F_padded)
+            q, scales, _ = compression.quantize(y, block=block,
+                                                mode=mode)
+            # gather every edge's partial payload + scales at the master
+            qs = lax.all_gather(q, pod_axis)       # (n, payload)
             ss = lax.all_gather(scales, pod_axis)  # (n, nb)
             ones = jnp.ones((1, n_pods), jnp.float32)
-            out = kernel_ops.combine_q(
-                ones, qs, ss, block=block, use_pallas=use_pallas
+            out = kernel_ops.combine_compressed(
+                mode, ones, qs, ss, block=block, use_pallas=use_pallas
             )[0]
             return out[: y.size].reshape(y.shape)
 

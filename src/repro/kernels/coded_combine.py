@@ -120,3 +120,118 @@ def coded_combine_q(
         interpret=interpret,
     )(cp, gp, sp)
     return out[:R, :F]
+
+
+def _combine_q4_kernel(c_ref, g_ref, s_ref, o_ref, *, block: int):
+    # c: (Rb, K), g: (K, Fb/2) packed int4 pairs, s: (K, Fb/block),
+    # o: (Rb, Fb).  Nibbles unpack in VMEM — HBM traffic is 0.5 B/value.
+    c = c_ref[...].astype(jnp.float32)
+    p = g_ref[...].astype(jnp.int32) & 0xFF  # unsigned byte view
+    lo = ((p & 0xF) ^ 8) - 8                 # even value: low nibble
+    hi = (((p >> 4) & 0xF) ^ 8) - 8          # odd value: high nibble
+    K, Fb2 = p.shape
+    g = jnp.stack([lo, hi], axis=-1).reshape(K, Fb2 * 2)
+    g = g.astype(jnp.float32)
+    s = s_ref[...]  # (K, nb)
+    Fb = Fb2 * 2
+    nb = Fb // block
+    g = (g.reshape(K, nb, block) * s[:, :, None]).reshape(K, Fb)
+    o_ref[...] = jnp.dot(
+        c, g, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret")
+)
+def coded_combine_q4(
+    coeff: jnp.ndarray,  # (R, K) f32
+    grads_q: jnp.ndarray,  # (K, F // 2) int8, two int4 values per byte
+    scales: jnp.ndarray,  # (K, F // block) f32
+    block: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused packed-int4 dequant coded combine.
+
+    ``grads_q`` carries two nibbles per byte in
+    :func:`repro.dist.compression.pack_int4` layout (value 2i in the
+    low nibble of byte i) — 8× less HBM/wire traffic than f32.  The
+    sign-extend + interleave + scale all happen in VMEM.
+    """
+    R, K = coeff.shape
+    K2, F2 = grads_q.shape
+    F = F2 * 2
+    assert K == K2 and F % block == 0 and block % 2 == 0
+    Rp = -(-R // R_BLOCK) * R_BLOCK
+    Fp = -(-F // F_BLOCK) * F_BLOCK
+    nb_blk = F_BLOCK // block
+    cp = jnp.pad(coeff, ((0, Rp - R), (0, 0)))
+    gp = jnp.pad(grads_q, ((0, 0), (0, (Fp - F) // 2)))
+    sp = jnp.pad(scales, ((0, 0), (0, (Fp - F) // block)))
+    out = pl.pallas_call(
+        functools.partial(_combine_q4_kernel, block=block),
+        grid=(Rp // R_BLOCK, Fp // F_BLOCK),
+        in_specs=[
+            pl.BlockSpec((R_BLOCK, K), lambda r, f: (r, 0)),
+            pl.BlockSpec((K, F_BLOCK // 2), lambda r, f: (0, f)),
+            pl.BlockSpec((K, nb_blk), lambda r, f: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((R_BLOCK, F_BLOCK), lambda r, f: (r, f)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Fp), jnp.float32),
+        interpret=interpret,
+    )(cp, gp, sp)
+    return out[:R, :F]
+
+
+def _combine_f8_kernel(c_ref, g_ref, s_ref, o_ref, *, block: int):
+    # c: (Rb, K), g: (K, Fb) fp8-e4m3, s: (K, Fb/block), o: (Rb, Fb)
+    c = c_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    s = s_ref[...]
+    K, Fb = g.shape
+    nb = Fb // block
+    g = (g.reshape(K, nb, block) * s[:, :, None]).reshape(K, Fb)
+    o_ref[...] = jnp.dot(
+        c, g, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret")
+)
+def coded_combine_f8(
+    coeff: jnp.ndarray,  # (R, K) f32
+    grads_q: jnp.ndarray,  # (K, F) float8_e4m3fn
+    scales: jnp.ndarray,  # (K, F // block) f32
+    block: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused fp8-e4m3 dequant coded combine.
+
+    Identical tiling to :func:`coded_combine_q`, but the payload is a
+    blockwise-scaled float8 — same 4× traffic cut as int8 with relative
+    (rather than fixed-grid) per-value precision.  The f32 upcast
+    happens in VMEM right before the MXU matmul.
+    """
+    R, K = coeff.shape
+    K2, F = grads_q.shape
+    assert K == K2 and F % block == 0
+    Rp = -(-R // R_BLOCK) * R_BLOCK
+    Fp = -(-F // F_BLOCK) * F_BLOCK
+    nb_blk = F_BLOCK // block
+    cp = jnp.pad(coeff, ((0, Rp - R), (0, 0)))
+    gp = jnp.pad(grads_q, ((0, 0), (0, Fp - F)))
+    sp = jnp.pad(scales, ((0, 0), (0, (Fp - F) // block)))
+    out = pl.pallas_call(
+        functools.partial(_combine_f8_kernel, block=block),
+        grid=(Rp // R_BLOCK, Fp // F_BLOCK),
+        in_specs=[
+            pl.BlockSpec((R_BLOCK, K), lambda r, f: (r, 0)),
+            pl.BlockSpec((K, F_BLOCK), lambda r, f: (0, f)),
+            pl.BlockSpec((K, nb_blk), lambda r, f: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((R_BLOCK, F_BLOCK), lambda r, f: (r, f)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Fp), jnp.float32),
+        interpret=interpret,
+    )(cp, gp, sp)
+    return out[:R, :F]

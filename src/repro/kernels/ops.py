@@ -13,20 +13,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.coded_combine import coded_combine, coded_combine_q
+from repro.kernels.coded_combine import (
+    coded_combine,
+    coded_combine_f8,
+    coded_combine_q,
+    coded_combine_q4,
+)
+from repro.kernels.decode_attention import decode_attention_fwd
 
 PyTree = Any
 
 
-def _on_tpu() -> bool:
+def on_tpu() -> bool:
+    """True iff the default jax backend is a real TPU.
+
+    The one place the ``use_pallas`` defaults come from (kernels run
+    compiled on TPU, interpret-mode elsewhere).  ``dist._compat``
+    re-exports this for the layers above kernels.
+    """
     return jax.default_backend() == "tpu"
+
+
+_on_tpu = on_tpu  # old private name, kept for stragglers
 
 
 def combine(coeff, grads, use_pallas: bool = True):
     """out = coeff @ grads with the kernel (interpret on CPU)."""
     if not use_pallas:
         return ref.coded_combine_ref(coeff, grads)
-    return coded_combine(coeff, grads, interpret=not _on_tpu())
+    return coded_combine(coeff, grads, interpret=not on_tpu())
 
 
 def combine_q(coeff, grads_q, scales, block: int = 128,
@@ -34,7 +49,69 @@ def combine_q(coeff, grads_q, scales, block: int = 128,
     if not use_pallas:
         return ref.coded_combine_q_ref(coeff, grads_q, scales, block)
     return coded_combine_q(
-        coeff, grads_q, scales, block=block, interpret=not _on_tpu()
+        coeff, grads_q, scales, block=block, interpret=not on_tpu()
+    )
+
+
+def combine_q4(coeff, grads_q, scales, block: int = 128,
+               use_pallas: bool = True):
+    """Packed-int4 fused dequant combine (grads_q is (K, F//2) bytes)."""
+    if not use_pallas:
+        return ref.coded_combine_q4_ref(coeff, grads_q, scales, block)
+    return coded_combine_q4(
+        coeff, grads_q, scales, block=block, interpret=not on_tpu()
+    )
+
+
+def combine_f8(coeff, grads_q, scales, block: int = 128,
+               use_pallas: bool = True):
+    """fp8-e4m3 fused dequant combine."""
+    if not use_pallas:
+        return ref.coded_combine_f8_ref(coeff, grads_q, scales, block)
+    return coded_combine_f8(
+        coeff, grads_q, scales, block=block, interpret=not on_tpu()
+    )
+
+
+#: compression mode → fused dequant-combine wrapper
+COMBINE_BY_MODE = {
+    "int8": combine_q,
+    "int4": combine_q4,
+    "fp8": combine_f8,
+}
+
+
+def combine_compressed(mode: str, coeff, grads_q, scales,
+                       block: int = 128, use_pallas: bool = True):
+    """Dispatch the fused combine matching a compression codec."""
+    try:
+        fn = COMBINE_BY_MODE[mode]
+    except KeyError:
+        raise ValueError(
+            f"no fused combine for compression mode {mode!r}"
+        ) from None
+    return fn(coeff, grads_q, scales, block=block, use_pallas=use_pallas)
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, window: int = 0,
+                     softcap: float = 0.0, use_pallas: bool = True):
+    """Ring-buffer GQA decode attention; out (B, 1, H, Dh).
+
+    With ``use_pallas=False`` the jnp oracle runs (slot positions
+    materialized via the same ring formula the kernel derives in VMEM).
+    """
+    if not use_pallas:
+        C = k_cache.shape[1]
+        weff = window if window > 0 else C
+        s = jnp.arange(C)
+        k_pos = s + weff * ((q_pos - s) // weff)
+        return ref.decode_attention_ref(
+            q, k_cache, v_cache, q_pos, k_pos,
+            window=window, softcap=softcap,
+        )
+    return decode_attention_fwd(
+        q, k_cache, v_cache, q_pos, window=window, softcap=softcap,
+        interpret=not on_tpu(),
     )
 
 

@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels (allclose targets)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -29,3 +30,68 @@ def coded_combine_q_ref(
     g = g * scales[:, :, None]
     out = jnp.einsum("rk,knb->rnb", coeff.astype(jnp.float32), g)
     return out.reshape(coeff.shape[0], F)
+
+
+def coded_combine_q4_ref(
+    coeff: jnp.ndarray,  # (R, K) f32
+    grads_q: jnp.ndarray,  # (K, F // 2) int8, packed int4 pairs
+    scales: jnp.ndarray,  # (K, F // block) f32 per-block scales
+    block: int,
+) -> jnp.ndarray:
+    """Packed-int4 variant: unpack nibbles, then the q combine."""
+    K, F2 = grads_q.shape
+    p = grads_q.astype(jnp.int32) & 0xFF
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    g = jnp.stack([lo, hi], axis=-1).reshape(K, F2 * 2).astype(jnp.int8)
+    return coded_combine_q_ref(coeff, g, scales, block)
+
+
+def coded_combine_f8_ref(
+    coeff: jnp.ndarray,  # (R, K) f32
+    grads_q: jnp.ndarray,  # (K, F) float8_e4m3fn
+    scales: jnp.ndarray,  # (K, F // block) f32 per-block scales
+    block: int,
+) -> jnp.ndarray:
+    """fp8-e4m3 variant of the fused dequant combine."""
+    K, F = grads_q.shape
+    nb = F // block
+    g = grads_q.astype(jnp.float32).reshape(K, nb, block)
+    g = g * scales[:, :, None]
+    out = jnp.einsum("rk,knb->rnb", coeff.astype(jnp.float32), g)
+    return out.reshape(coeff.shape[0], F)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, 1, H, Dh) — one new token per sequence
+    k_cache: jnp.ndarray,  # (B, C, Kv, Dh) ring-buffer keys
+    v_cache: jnp.ndarray,  # (B, C, Kv, Dh) ring-buffer values
+    q_pos,                 # scalar int — absolute position of the token
+    k_pos: jnp.ndarray,    # (C,) int — absolute position per slot, <0 empty
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """GQA decode attention over a ring-buffer cache (pure-jnp oracle).
+
+    Mirrors :func:`repro.models.attention.decode_attention` — kept here
+    (kernels may not import models) as the allclose target for the
+    Pallas kernel: H = Kv·G query heads share Kv cache heads; a slot is
+    attendable iff it holds a real position ≤ q_pos inside the window.
+    """
+    B, _, H, Dh = q.shape
+    Kv = k_cache.shape[2]
+    G = H // Kv
+    qf = q.astype(jnp.float32).reshape(B, Kv, G, Dh)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, kf) / jnp.sqrt(
+        jnp.float32(Dh))
+    if softcap and softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = (k_pos >= 0) & (k_pos <= q_pos)
+    if window and window > 0:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)

@@ -63,8 +63,9 @@ def main(argv=None):
     ap.add_argument("--cluster", default="hetero",
                     choices=["homogeneous", "hetero"])
     ap.add_argument("--dist", default="off",
-                    choices=["off", "coded", "coded_int8"],
-                    help="aggregation mode of the underlying session")
+                    choices=["off", "coded", "coded_int8", "coded_q"],
+                    help="aggregation mode of the underlying session "
+                         "(coded_q: int8 codec default)")
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--seed", type=int, default=0)
     # ---- control plane ------------------------------------------------

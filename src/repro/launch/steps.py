@@ -184,8 +184,9 @@ def _make_dist_train_step(
     and computes the gradient of its local weighted loss, which IS its
     encoded message G_ij (eq. 22).  The decode then runs as the
     two-stage λ-weighted psum of :mod:`repro.dist.grad_sync` (eqs.
-    25/27); with ``tcfg.grad_compression == "int8"`` the cross-pod hop
-    rides the blockwise-int8 + error-feedback path and ``residual``
+    25/27); with ``tcfg.grad_compression`` set (int8 | int4 | fp8) the
+    cross-pod hop rides the blockwise-quantized + error-feedback path
+    of that codec and ``residual``
     threads the per-pod EF state (leaves ``(n_pods, *param_shape)``,
     sharded over "pod" and, under TP, over "model" like the gradient
     leaf it telescopes against; pass an empty dict otherwise).
@@ -265,7 +266,15 @@ def _make_dist_train_step(
     pod_axis, data_axis = axes
     n_pods = mesh.shape[pod_axis]
     n_groups = n_pods * mesh.shape[data_axis]
-    compressed = tcfg.grad_compression == "int8"
+    compressed = tcfg.grad_compression != "none"
+    if compressed:
+        from repro.dist import compression as _comp
+
+        if tcfg.grad_compression not in _comp.COMPRESSION_MODES:
+            raise ValueError(
+                f"grad_compression={tcfg.grad_compression!r} not in "
+                f"{('none',) + _comp.COMPRESSION_MODES}"
+            )
 
     ctx = shard_lib.make_shard_ctx(
         mesh, seq_shard=tcfg.seq_shard_activations
@@ -503,6 +512,7 @@ def _make_dist_train_step(
             g, residual = grad_sync.compressed_coded_psum(
                 g, psum_lam, residual, n_pods=n_pods, axes=axes,
                 block=tcfg.grad_compression_block,
+                mode=tcfg.grad_compression,
             )
         else:
             g = grad_sync.coded_weighted_psum(g, psum_lam, axes)

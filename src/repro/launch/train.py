@@ -93,10 +93,12 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--dist", default="off",
-                    choices=["off", "coded", "coded_int8"],
+                    choices=["off", "coded", "coded_int8", "coded_q"],
                     help="aggregation execution mode: single-host "
-                         "reference, shard_map coded collectives, or "
-                         "coded with the int8+EF cross-pod hop")
+                         "reference, shard_map coded collectives, "
+                         "coded with the int8+EF cross-pod hop, or "
+                         "coded_q with the codec --grad-compression "
+                         "picks (int8 | int4 | fp8)")
     ap.add_argument("--model-shards", type=int, default=1,
                     help="'model' mesh axis size (--dist modes): real "
                          "in-shard_map tensor parallelism — params/opt-"
@@ -139,7 +141,15 @@ def main(argv=None):
                          "pipeline).  Must divide the per-group coded "
                          "batch rows (load D × --part-batch)")
     ap.add_argument("--grad-block", type=int, default=64,
-                    help="int8 block size on the edge→master hop")
+                    help="quantization block size on the edge→master "
+                         "hop (any codec)")
+    ap.add_argument("--grad-compression", default="",
+                    choices=["", "int8", "int4", "fp8"],
+                    help="cross-pod codec for --dist coded_q "
+                         "(default int8): int8/fp8 cut the hop bytes "
+                         "4x, packed int4 8x; all share the EF "
+                         "residual contract, so kill/resume and "
+                         "replans behave identically")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
@@ -189,6 +199,7 @@ def main(argv=None):
             lr=args.lr,
             total_steps=args.steps,
             grad_block=args.grad_block,
+            grad_compression=args.grad_compression,
             seed=args.seed,
             scheme=args.scheme,
             checkpoint_dir=args.checkpoint_dir,

@@ -809,6 +809,7 @@ def fill_cross_cache(params: PyTree, cfg: ModelConfig,
 def _decode_layer(
     p: Dict, x1: jnp.ndarray, kind: str, cfg: ModelConfig,
     cache_entry: PyTree, pos: jnp.ndarray,
+    use_pallas: bool = False,
 ) -> Tuple[jnp.ndarray, PyTree]:
     B = x1.shape[0]
     H, Kv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -831,13 +832,23 @@ def _decode_layer(
         vc = lax.dynamic_update_slice_in_dim(
             cache_entry["v"], v.reshape(B, 1, Kv * Dh).astype(
                 cache_entry["v"].dtype), slot, 1)
-        k_pos = attn_lib.ring_slot_positions(
-            C, pos + 1, window if window > 0 else C
-        )
-        out = attn_lib.decode_attention(
-            q, kc.reshape(B, C, Kv, Dh), vc.reshape(B, C, Kv, Dh),
-            pos, k_pos, window=window, softcap=cfg.logit_softcap,
-        )
+        if use_pallas:
+            # fused kernel derives the slot-position vector in VMEM from
+            # the ring write pointer (same formula as below)
+            from repro.kernels import ops as kernel_ops
+
+            out = kernel_ops.decode_attention(
+                q, kc.reshape(B, C, Kv, Dh), vc.reshape(B, C, Kv, Dh),
+                pos, window=window, softcap=cfg.logit_softcap,
+            )
+        else:
+            k_pos = attn_lib.ring_slot_positions(
+                C, pos + 1, window if window > 0 else C
+            )
+            out = attn_lib.decode_attention(
+                q, kc.reshape(B, C, Kv, Dh), vc.reshape(B, C, Kv, Dh),
+                pos, k_pos, window=window, softcap=cfg.logit_softcap,
+            )
         out = out.reshape(B, 1, H * Dh) @ p["attn"]["wo"]
         new_entry = dict(cache_entry)
         new_entry.update({"k": kc, "v": vc})
@@ -878,8 +889,21 @@ def decode_step(
     cfg: ModelConfig,
     token: jnp.ndarray,  # (B, 1) int32
     cache: PyTree,
+    use_pallas: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, PyTree]:
-    """One decode step against the cache; returns (logits (B,V), cache)."""
+    """One decode step against the cache; returns (logits (B,V), cache).
+
+    ``use_pallas=None`` auto-selects the fused ring-buffer decode-
+    attention kernel on TPU (``kernels.decode_attention``) and the XLA
+    path elsewhere; True forces the kernel (interpret mode off-TPU —
+    the parity configuration tests/test_decode_attention.py pins).
+    Only the self-attention ring path switches; ssm / recurrent /
+    cross-attention layers are unaffected.
+    """
+    if use_pallas is None:
+        from repro.kernels.ops import on_tpu
+
+        use_pallas = on_tpu()
     pos = cache["length"]
     params = cast_params(params, cfg)
     x = _embed(params, cfg, token)
@@ -892,7 +916,7 @@ def decode_step(
             kind = cfg.block_pattern[k]
             x, ne = _decode_layer(
                 group_params[f"p{k}"], x, kind, cfg,
-                group_cache[f"p{k}"], pos,
+                group_cache[f"p{k}"], pos, use_pallas=use_pallas,
             )
             new_cache[f"p{k}"] = ne
         return x, new_cache
@@ -905,7 +929,7 @@ def decode_step(
         kind = cfg.block_pattern[k]
         x, ne = _decode_layer(
             params["rest"][f"r{k}"], x, kind, cfg,
-            cache["rest"][f"r{k}"], pos,
+            cache["rest"][f"r{k}"], pos, use_pallas=use_pallas,
         )
         new_rest[f"r{k}"] = ne
     logits = anchor_logits(_unembed(params, cfg, x)[:, 0])

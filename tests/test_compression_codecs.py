@@ -1,0 +1,139 @@
+"""Property tests for the blockwise codec family (int8 / int4 / fp8).
+
+Shared contract (dist/compression.py): flat payload padded to a block
+multiple, one f32 scale per block, pad positions masked out of the
+scale reduction and quantized to exactly zero, EF residuals telescope.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: fixed-example fallback
+    from repro._hypothesis_fallback import (
+        given, settings, strategies as st,
+    )
+
+from repro.dist import compression as C
+
+MODES = C.COMPRESSION_MODES  # ("int8", "int4", "fp8")
+
+# worst-case |x̂ − x| as a multiple of the block max-abs: half a grid
+# step for the int codecs, one e4m3 mantissa ulp (2^-3) + rounding for
+# fp8 (values scale to ≤ 448 where the ulp is 32 ⇒ 16/448 ≈ 0.036)
+_REL_ERR = {"int8": 0.5 / 127, "int4": 0.5 / 7, "fp8": 16.5 / 448}
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mode=st.sampled_from(MODES),
+    n=st.sampled_from([1, 2, 7, 63, 64, 65, 129, 1000]),
+    block=st.sampled_from([32, 64, 256]),
+    scale=st.sampled_from([1e-4, 1.0, 1e4]),
+    seed=st.integers(0, 1000),
+)
+def test_roundtrip_error_bound(mode, n, block, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    q, s, meta = C.quantize(x, block=block, mode=mode)
+    back = np.asarray(C.dequantize(q, s, meta))
+    assert back.shape == x.shape
+    assert meta.mode == mode and meta.pad == (-n) % block
+    # per-block error bound: |x̂ − x| ≤ rel · blockmax
+    xpad = np.pad(x, (0, meta.pad)).reshape(-1, block)
+    blockmax = np.abs(xpad).max(axis=1, keepdims=True)
+    err = np.abs(np.pad(back, (0, meta.pad)).reshape(-1, block) - xpad)
+    bound = _REL_ERR[mode] * blockmax + 1e-30
+    assert (err <= bound * 1.01).all(), (mode, n, err.max())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mode=st.sampled_from(MODES),
+    n=st.sampled_from([1, 65, 130, 200]),
+    seed=st.integers(0, 1000),
+)
+def test_pad_never_skews_scales(mode, n, seed):
+    """Zero-padding is masked out of the per-block scale reduction:
+    the scales of the full blocks match the unpadded prefix's, and the
+    pad region quantizes to exactly zero."""
+    block = 64
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32) * 100.0
+    q, s, meta = C.quantize(x, block=block, mode=mode)
+    full = n // block
+    if full:
+        _, s_prefix, _ = C.quantize(x[: full * block], block=block,
+                                    mode=mode)
+        np.testing.assert_array_equal(np.asarray(s)[:full],
+                                      np.asarray(s_prefix))
+    if meta.pad:
+        back = np.asarray(C.dequantize(q, s, meta))
+        # dequantizing the padded payload directly exposes the tail
+        flat = np.asarray(q)
+        if mode == "int4":
+            flat = np.asarray(C.unpack_int4(q))
+        tail = flat[flat.size - meta.pad:]
+        assert np.count_nonzero(np.asarray(tail, np.float32)) == 0
+        np.testing.assert_allclose(back, x, atol=np.abs(x).max())
+
+
+def test_all_zero_blocks_roundtrip_exactly():
+    for mode in MODES:
+        q, s, meta = C.quantize(np.zeros(192, np.float32), block=64,
+                                mode=mode)
+        assert np.asarray(s).max() == 0.0
+        back = np.asarray(C.dequantize(q, s, meta))
+        np.testing.assert_array_equal(back, np.zeros(192, np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.sampled_from([2, 64, 250]))
+def test_int4_pack_unpack_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    v = rng.integers(-8, 8, size=2 * n).astype(np.int32)
+    packed = C.pack_int4(jnp.asarray(v))
+    assert packed.shape == (n,) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(C.unpack_int4(packed)), v)
+
+
+def test_int4_requires_even_block():
+    with pytest.raises(ValueError):
+        C.quantize_int4(np.ones(8, np.float32), block=3)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        C.quantize(np.ones(8, np.float32), mode="int2")
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mode=st.sampled_from(MODES),
+    T=st.sampled_from([3, 8]),
+    seed=st.integers(0, 1000),
+)
+def test_error_feedback_telescopes(mode, T, seed):
+    """Σ_t sent_t + r_T = T·g + r_0 for every codec: the transmitted
+    values telescope, so the time-averaged gradient is unbiased."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal(100), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal(13), jnp.float32)}
+    res = {k: jnp.zeros_like(v) for k, v in g.items()}
+    total = {k: jnp.zeros_like(v) for k, v in g.items()}
+    for _ in range(T):
+        qt, res = C.compress_error_feedback(g, res, block=32, mode=mode)
+        sent = C.dequantize_tree(qt)
+        total = {k: total[k] + sent[k] for k in total}
+    for k in g:
+        lhs = np.asarray(total[k] + res[k])
+        rhs = T * np.asarray(g[k])
+        np.testing.assert_allclose(lhs, rhs, rtol=2e-5, atol=2e-5)
+
+
+def test_wire_bytes_per_value():
+    assert C.wire_bytes_per_value("int4", 256) < \
+        C.wire_bytes_per_value("int8", 256) == \
+        C.wire_bytes_per_value("fp8", 256) < 4.0
+    np.testing.assert_allclose(C.wire_bytes_per_value("int4", 64),
+                               0.5 + 4.0 / 64)

@@ -13,7 +13,12 @@ except ImportError:  # offline container: fixed-example fallback
 from repro.core.hgc import HGCCode
 from repro.core.topology import Tolerance, Topology
 from repro.kernels import ops, ref
-from repro.kernels.coded_combine import coded_combine, coded_combine_q
+from repro.kernels.coded_combine import (
+    coded_combine,
+    coded_combine_f8,
+    coded_combine_q,
+    coded_combine_q4,
+)
 
 
 @settings(max_examples=25, deadline=None)
@@ -58,6 +63,82 @@ def test_coded_combine_q_matches_ref(R, K, nF, seed):
                           interpret=True)
     want = ref.coded_combine_q_ref(coeff, grads_q, scales, block)
     np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    R=st.integers(1, 8),
+    K=st.sampled_from([2, 8, 16]),
+    nF=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_coded_combine_q4_matches_ref(R, K, nF, seed):
+    block = 128
+    F = nF * block
+    rng = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    coeff = jax.random.normal(k1, (R, K), jnp.float32)
+    grads_q = jax.random.randint(k2, (K, F // 2), -128, 128, jnp.int8)
+    scales = jax.random.uniform(k3, (K, F // block), jnp.float32,
+                                0.01, 1.0)
+    out = coded_combine_q4(coeff, grads_q, scales, block=block,
+                           interpret=True)
+    want = ref.coded_combine_q4_ref(coeff, grads_q, scales, block)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    R=st.integers(1, 8),
+    K=st.sampled_from([2, 8, 16]),
+    nF=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_coded_combine_f8_matches_ref(R, K, nF, seed):
+    block = 128
+    F = nF * block
+    rng = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    coeff = jax.random.normal(k1, (R, K), jnp.float32)
+    grads_q = jax.random.normal(k2, (K, F), jnp.float32).astype(
+        jnp.float8_e4m3fn)
+    scales = jax.random.uniform(k3, (K, F // block), jnp.float32,
+                                0.01, 1.0)
+    out = coded_combine_f8(coeff, grads_q, scales, block=block,
+                           interpret=True)
+    want = ref.coded_combine_f8_ref(coeff, grads_q, scales, block)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_combine_compressed_dispatch_matches_variants():
+    """ops.combine_compressed routes each codec to its fused kernel."""
+    from repro.dist import compression as comp
+
+    rng = np.random.default_rng(7)
+    K, F, block = 4, 512, 128
+    coeff = jnp.asarray(rng.normal(size=(1, K)), jnp.float32)
+    g = rng.normal(size=(K, F)).astype(np.float32)
+    for mode in comp.COMPRESSION_MODES:
+        qs, ss = [], []
+        for k in range(K):
+            q, s, _ = comp.quantize(g[k], block=block, mode=mode)
+            qs.append(q)
+            ss.append(s)
+        gq, sc = jnp.stack(qs), jnp.stack(ss)
+        out = ops.combine_compressed(mode, coeff, gq, sc, block=block,
+                                     use_pallas=True)
+        want = ops.combine_compressed(mode, coeff, gq, sc, block=block,
+                                      use_pallas=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        # and each codec's fused path stays within quantization error
+        exact = coeff @ jnp.asarray(g)
+        err = np.max(np.abs(np.asarray(out) - np.asarray(exact)))
+        bound = {"int8": 0.05, "int4": 0.6, "fp8": 0.3}[mode]
+        assert err < bound, (mode, err)
+    with pytest.raises(ValueError):
+        ops.combine_compressed("int2", coeff, jnp.zeros((K, F), jnp.int8),
+                               jnp.ones((K, F // block)), block=block)
 
 
 def test_kernel_end_to_end_hgc_decode():
